@@ -1,0 +1,82 @@
+"""Paper §3.3 remark — "adaptive choice of K2 may be better for convergence"
+(beyond-paper ablation).
+
+Compares static K2=8, static K2=32, and the AdaptiveK2 ladder (start at 32
+while far from the optimum, shrink as the loss falls) at an equal total
+step budget, counting global reductions actually paid.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+
+from repro.configs.base import HierAvgParams
+from repro.core import AdaptiveK2, HierTopology, Simulator
+from repro.core.hier_avg import init_state, make_hier_round
+from repro.optim import sgd
+from benchmarks.common import Row, cls_setup
+
+TOTAL_STEPS = 192
+K1 = 4
+
+
+def _run_static(setup, k2: int):
+    topo = HierTopology(1, 4, 4)
+    sim = Simulator(setup["loss_fn"], setup["init_fn"], setup["sample"],
+                    topo=topo, hier=HierAvgParams(K1, k2), optimizer=sgd(0.1),
+                    per_learner_batch=16, eval_batch=setup["eval_batch"],
+                    seed=23)
+    t0 = time.time()
+    res = sim.run(TOTAL_STEPS // k2)
+    us = (time.time() - t0) / (TOTAL_STEPS // k2) * 1e6
+    return res, us, TOTAL_STEPS // k2
+
+
+def _run_adaptive(setup):
+    """Round-by-round K2 from the controller (round fns cached per K2)."""
+    topo = HierTopology(1, 4, 4)
+    opt = sgd(0.1)
+    ctl = AdaptiveK2(k1=K1, k2_max=32)
+    state = init_state(topo, setup["init_fn"], opt, jax.random.PRNGKey(23))
+    fns, key = {}, jax.random.PRNGKey(99)
+    steps = syncs = 0
+    loss = None
+    t0 = time.time()
+    import jax.numpy as jnp
+    while steps < TOTAL_STEPS:
+        h = ctl.params_for(loss if loss is not None else 1e9)
+        if h.k2 not in fns:
+            fns[h.k2] = jax.jit(make_hier_round(setup["loss_fn"], opt, h))
+        key, kb = jax.random.split(key)
+        n = h.k2 * topo.n_learners * 16
+        batch = setup["sample"](kb, n)
+        shaped = jax.tree.map(
+            lambda x: x.reshape((h.beta, h.k1) + topo.shape + (16,)
+                                + x.shape[1:]), batch)
+        state, metrics = fns[h.k2](state, shaped)
+        loss = float(metrics["loss"])
+        steps += h.k2
+        syncs += 1
+    dt = time.time() - t0
+    el, em = jax.jit(setup["loss_fn"])(
+        jax.tree.map(lambda x: x[0, 0, 0], state.params),
+        setup["eval_batch"])
+    return float(el), float(em["accuracy"]), syncs, dt / syncs * 1e6
+
+
+def run() -> List[Row]:
+    setup = cls_setup()
+    rows: List[Row] = []
+    for k2 in (8, 32):
+        res, us, syncs = _run_static(setup, k2)
+        rows.append((f"adaptive_k2/static_k2={k2}", us,
+                     f"test_loss={res.eval_losses[-1]:.4f} "
+                     f"test_acc={res.eval_accs[-1]:.4f} "
+                     f"global_reductions={syncs}"))
+    el, ea, syncs, us = _run_adaptive(setup)
+    rows.append(("adaptive_k2/adaptive(32->4)", us,
+                 f"test_loss={el:.4f} test_acc={ea:.4f} "
+                 f"global_reductions={syncs}"))
+    return rows

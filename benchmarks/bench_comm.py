@@ -1,0 +1,51 @@
+"""Communication accounting — the paper's motivation made quantitative.
+
+For every assigned architecture: reduction seconds per K2-step cycle for
+Hier-AVG vs K-AVG under the ring model (theory.CommModel, ICI vs DCI
+bandwidths), plus — when the dry-run artifacts exist — the measured
+per-device collective link-bytes of the compiled hier_round.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.theory import CommModel, comm_per_k2_steps
+from benchmarks.common import Row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run() -> List[Row]:
+    cm = CommModel()
+    rows: List[Row] = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        model_bytes = cfg.param_count() * 2          # bf16
+        lay = cfg.layout
+        P = max(lay.learners_per_pod, 2)             # >=2 for cross-pod
+        S = max(lay.local, 2)
+        k1, k2 = 4, 8
+        loc, glo = comm_per_k2_steps(model_bytes, k1, k2, P, S, cm)
+        _, glo_kavg = comm_per_k2_steps(model_bytes, k2, k2, P, 1, cm)
+        hier_ms = (loc + glo) / k2 * 1e3
+        kavg_k1 = k1  # K-AVG syncing as often as hier's local cadence
+        _, glo_k1 = comm_per_k2_steps(model_bytes, kavg_k1, kavg_k1, P, 1,
+                                      cm)
+        kavg_ms = glo_k1 / kavg_k1 * 1e3
+        derived = (f"hier_ms_per_step={hier_ms:.2f} "
+                   f"kavg_same_cadence_ms={kavg_ms:.2f} "
+                   f"saving={1 - hier_ms / max(kavg_ms, 1e-12):.1%}")
+        f = os.path.join(DRYRUN_DIR, f"{arch}__train_4k__1pod.json")
+        if os.path.exists(f):
+            rec = json.load(open(f))
+            hlo = rec.get("roofline_hlo_per_body", rec.get("roofline"))
+            lb = hlo["collective_link_bytes"]
+            steps = hlo.get("steps", 1)
+            derived += f" measured_link_MB_per_step={lb / steps / 2**20:.0f}"
+        rows.append((f"comm/{arch}", 0.0, derived))
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig. 3 (impact of K1) + Fig. 4 (impact of S) on training loss.
+
+Paper setup: K2=32, P=16; Fig 3 varies K1 in {4, 8} at S=4; Fig 4 varies
+S in {2, 4} at K1=4.  Claim (Thm 3.5): smaller K1 and larger S give lower
+training loss at the same data budget.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import HierAvgParams
+from repro.core import HierTopology
+from benchmarks.common import Row, cls_setup, fmt, run_variant
+
+ROUNDS = 8   # x K2=32 steps
+
+
+def run() -> List[Row]:
+    setup = cls_setup()
+    rows: List[Row] = []
+    # Fig 3: K1 sweep at S=4
+    topo = HierTopology(pods=1, groups=4, local=4)
+    for k1 in (4, 8):
+        hier = HierAvgParams(k1=k1, k2=32)
+        res, us = run_variant(setup, topo=topo, hier=hier, rounds=ROUNDS,
+                              seed=5)
+        rows.append((f"fig3/k1={k1}(s=4)", us, fmt(res)))
+    # Fig 4: S sweep at K1=4 (same P=16)
+    for groups, s in ((8, 2), (4, 4)):
+        topo = HierTopology(pods=1, groups=groups, local=s)
+        hier = HierAvgParams(k1=4, k2=32)
+        res, us = run_variant(setup, topo=topo, hier=hier, rounds=ROUNDS,
+                              seed=5)
+        rows.append((f"fig4/s={s}(k1=4)", us, fmt(res)))
+    return rows

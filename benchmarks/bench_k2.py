@@ -1,0 +1,31 @@
+"""Paper Fig. 1 + Fig. 2 — impact of K2 on training and test accuracy.
+
+Paper setup: P=32 learners, K1=4, S=4, K2 in {8, 16, 32}, four CNNs on
+CIFAR-10.  Here: P=16 learners (CPU budget), same K1/S/K2 grid, MLP on the
+gaussian-mixture CIFAR stand-in.  The paper's claim to validate: larger K2
+does NOT reduce training convergence and often gives equal-or-better test
+accuracy, at 2-4x fewer global reductions.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import HierAvgParams
+from repro.core import HierTopology
+from benchmarks.common import Row, cls_setup, fmt, run_variant
+
+# equal data budget: rounds * K2 = const (paper: fixed epochs)
+TOTAL_STEPS = 192
+
+
+def run() -> List[Row]:
+    setup = cls_setup()
+    topo = HierTopology(pods=1, groups=4, local=4)      # P=16, S=4
+    rows: List[Row] = []
+    for k2 in (8, 16, 32):
+        hier = HierAvgParams(k1=4, k2=k2)
+        res, us = run_variant(setup, topo=topo, hier=hier,
+                              rounds=TOTAL_STEPS // k2, seed=3)
+        rows.append((f"fig1_2/k2={k2}", us,
+                     fmt(res) + f" global_reductions={TOTAL_STEPS // k2}"))
+    return rows

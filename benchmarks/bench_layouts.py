@@ -1,0 +1,79 @@
+"""Beyond-paper: per-architecture layout optimization (train_4k).
+
+For every assigned arch, sweep all G x S x F x TP factorizations of the
+256-chip pod (S in {2,4}, learner batch >= 1, microbatch chosen so the
+per-device activation carry fits ~4 GiB) through the analytic roofline and
+report baseline vs best layout.  This generalizes §Perf pair 1 to the whole
+pool; winners for the three hillclimbed pairs were compile-verified
+(experiments/hillclimb/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.configs.base import ParallelLayout
+from repro.launch.analytic import analytic_roofline
+from benchmarks.common import Row
+
+GLOBAL_BATCH = 256
+SEQ = 4096
+CARRY_BUDGET = 4 * 2 ** 30   # per-device saved-activation budget
+
+
+def _candidates(cfg):
+    n_bytes = cfg.param_count() * 2
+    for tp in (1, 2, 4, 8, 16):
+        data = 256 // tp
+        for s in (2, 4):
+            for f in (1, 2, 4, 8, 16, 32):
+                if data % (s * f) or f > data:
+                    continue
+                g = data // (s * f)
+                learners = g * s
+                if GLOBAL_BATCH % learners or GLOBAL_BATCH // learners < 1:
+                    continue
+                # per-device weights+grads must fit ~12 GiB
+                if n_bytes / (f * tp) * 3 > 12 * 2 ** 30:
+                    continue
+                b_l = GLOBAL_BATCH // learners
+                # pick the smallest microbatch whose carry fits the budget
+                micro = 1
+                while micro <= b_l:
+                    carry = (b_l // micro) * SEQ * cfg.d_model * 2 \
+                        / f * cfg.n_layers
+                    if carry <= CARRY_BUDGET:
+                        break
+                    micro *= 2
+                if micro > b_l:
+                    continue
+                yield ParallelLayout(g, s, f, tp, micro)
+
+
+def _score(cfg, lay):
+    c = dataclasses.replace(cfg, layout=lay)
+    r = analytic_roofline(c, "train_4k")
+    return max(r.compute_s, r.memory_s, r.collective_s), r
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        base_t, base_r = _score(cfg, cfg.layout)
+        best_lay, best_t, best_r = cfg.layout, base_t, base_r
+        for lay in _candidates(cfg):
+            t, r = _score(cfg, lay)
+            if t < best_t:
+                best_lay, best_t, best_r = lay, t, r
+        gain = base_t / best_t if best_t else 1.0
+        rows.append((
+            f"layout_opt/{arch}", 1e6 * best_t,
+            f"baseline={cfg.layout.groups}x{cfg.layout.local}x"
+            f"{cfg.layout.fsdp}x{cfg.layout.tp}:{cfg.layout.microbatch}"
+            f"({1e3*base_t:.0f}ms) "
+            f"best={best_lay.groups}x{best_lay.local}x{best_lay.fsdp}x"
+            f"{best_lay.tp}:{best_lay.microbatch}({1e3*best_t:.0f}ms) "
+            f"speedup={gain:.2f}x bottleneck={best_r.bottleneck}"))
+    return rows

@@ -1,0 +1,54 @@
+"""Paper Table 1 — Hier-AVG vs K-AVG at matched data budgets.
+
+Paper rows: (P=16, K-AVG K=32) vs (Hier-AVG K2=64, K1 in {2,4,16}, S=4);
+(P=32, K=4) vs (K2=8, K1=4, S=8); (P=64, K=4) vs (K2=8, K1=1, S=4).
+Claim: with HALF the global reductions, Hier-AVG matches or beats K-AVG's
+test accuracy.  P=64 runs on CPU here, so row 3 uses a shorter budget.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import HierAvgParams
+from repro.core import HierTopology
+from benchmarks.common import Row, cls_setup, fmt, run_variant
+
+TOTAL_STEPS = 256
+
+
+def run() -> List[Row]:
+    setup = cls_setup()
+    rows: List[Row] = []
+
+    # --- P=16 block: K-AVG K=32 vs Hier-AVG K2=64 ---
+    topo = HierTopology(1, 4, 4)
+    res, us = run_variant(setup, topo=topo, hier=HierAvgParams(32, 32),
+                          algo="kavg", rounds=TOTAL_STEPS // 32, seed=11)
+    rows.append(("table1/p16/kavg_k32", us, fmt(res)))
+    for k1 in (2, 4, 16):
+        res, us = run_variant(setup, topo=topo,
+                              hier=HierAvgParams(k1=k1, k2=64),
+                              rounds=TOTAL_STEPS // 64, seed=11)
+        rows.append((f"table1/p16/hier_k2=64_k1={k1}_s4", us, fmt(res)))
+
+    # --- P=32 block: K-AVG K=4 vs Hier-AVG K2=8, S=8 ---
+    topo = HierTopology(1, 8, 4)
+    res, us = run_variant(setup, topo=topo, hier=HierAvgParams(4, 4),
+                          algo="kavg", rounds=96 // 4, seed=12,
+                          per_learner_batch=8)
+    rows.append(("table1/p32/kavg_k4", us, fmt(res)))
+    topo_s8 = HierTopology(1, 4, 8)
+    res, us = run_variant(setup, topo=topo_s8, hier=HierAvgParams(4, 8),
+                          rounds=96 // 8, seed=12, per_learner_batch=8)
+    rows.append(("table1/p32/hier_k2=8_k1=4_s8", us, fmt(res)))
+
+    # --- P=64 block: K-AVG K=4 vs Hier-AVG K2=8, K1=1, S=4 ---
+    topo = HierTopology(1, 16, 4)
+    res, us = run_variant(setup, topo=topo, hier=HierAvgParams(4, 4),
+                          algo="kavg", rounds=64 // 4, seed=13,
+                          per_learner_batch=4)
+    rows.append(("table1/p64/kavg_k4", us, fmt(res)))
+    res, us = run_variant(setup, topo=topo, hier=HierAvgParams(1, 8),
+                          rounds=64 // 8, seed=13, per_learner_batch=4)
+    rows.append(("table1/p64/hier_k2=8_k1=1_s4", us, fmt(res)))
+    return rows

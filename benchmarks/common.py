@@ -1,0 +1,59 @@
+"""Shared benchmark plumbing.
+
+Every benchmark returns rows ``(name, us_per_call, derived)`` — wall time
+per Hier-AVG round and the experiment's headline metric — which run.py
+prints as CSV (one function per paper table/figure).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import HierAvgParams
+from repro.configs.resnet18_cifar import MLPConfig
+from repro.core import HierTopology, Simulator
+from repro.data.synthetic import make_classification_task
+from repro.models.resnet import mlp_cls_init, mlp_cls_loss
+from repro.optim import sgd
+
+Row = Tuple[str, float, str]
+
+
+def cls_setup(in_dim: int = 32, n_classes: int = 10, hidden=(64, 64),
+              noise: float = 0.8, seed: int = 21):
+    """The CIFAR stand-in used by the paper-shape benchmarks."""
+    cfg = MLPConfig(in_dim=in_dim, hidden=hidden, n_classes=n_classes)
+    sample = make_classification_task(in_dim, n_classes, seed=seed,
+                                      noise=noise)
+    return {
+        "loss_fn": lambda p, b: mlp_cls_loss(p, b),
+        "init_fn": lambda k: mlp_cls_init(k, cfg),
+        "sample": sample,
+        "eval_batch": sample(jax.random.PRNGKey(9999), 2048),
+    }
+
+
+def timed_run(sim: Simulator, rounds: int):
+    t0 = time.time()
+    res = sim.run(rounds)
+    dt = time.time() - t0
+    return res, dt / rounds * 1e6   # us per round
+
+
+def run_variant(setup: Dict, *, topo: HierTopology, hier: HierAvgParams,
+                algo: str = "hier", lr: float = 0.1, rounds: int = 12,
+                per_learner_batch: int = 16, seed: int = 0):
+    sim = Simulator(setup["loss_fn"], setup["init_fn"], setup["sample"],
+                    topo=topo, hier=hier, algo=algo, optimizer=sgd(lr),
+                    per_learner_batch=per_learner_batch,
+                    eval_batch=setup["eval_batch"], seed=seed)
+    return timed_run(sim, rounds)
+
+
+def fmt(res) -> str:
+    return (f"train_loss={res.losses[-1]:.4f} "
+            f"test_loss={res.eval_losses[-1]:.4f} "
+            f"test_acc={res.eval_accs[-1]:.4f}")

@@ -1,0 +1,63 @@
+"""§Roofline report: reads experiments/dryrun/*.json and emits the
+per-(arch x shape x mesh) three-term table (compute / memory / collective
+seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs utilization).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(pattern: str = "*.json") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def markdown_table(recs: List[Dict], mesh: str = "1pod-256") -> str:
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | "
+        "bottleneck | useful FLOPs | peak GiB |",
+        "|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        useful = t.get("useful_flops_ratio")
+        if useful is None and t.get("model_flops_per_device"):
+            useful = t["model_flops_per_device"] / (t["compute_s"] * 197e12)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {1e3 * t['compute_s']:.2f} | {1e3 * t['memory_s']:.2f} "
+            f"| {1e3 * t['collective_s']:.2f} | {t['bottleneck']} "
+            f"| {useful or 0:.2f} "
+            f"| {r['memory']['peak_est_bytes'] / 2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run():
+    """Benchmark-harness entry: emit one row per dry-run artifact."""
+    rows = []
+    for r in load_records():
+        t = r["roofline"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            1e6 * max(t["compute_s"], t["memory_s"], t["collective_s"]),
+            f"bottleneck={t['bottleneck']} "
+            f"c/m/coll_ms={1e3*t['compute_s']:.2f}/"
+            f"{1e3*t['memory_s']:.2f}/{1e3*t['collective_s']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(markdown_table(recs, "1pod-256"))
+    print()
+    print(markdown_table(recs, "2pod-512"))

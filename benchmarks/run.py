@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping:
+  bench_k2          -> paper Fig. 1 (train acc) + Fig. 2 (test acc) K2 sweep
+  bench_k1_s        -> paper Fig. 3 (K1 sweep) + Fig. 4 (S sweep)
+  bench_vs_kavg     -> paper Table 1 (Hier-AVG vs K-AVG, P in {16,32,64})
+  bench_large_proxy -> paper Fig. 5 (larger-scale vs K-AVG)
+  bench_adaptive_k2 -> paper §3.3 'adaptive K2' remark (beyond-paper ablation)
+  bench_layouts     -> beyond-paper per-arch layout optimization sweep
+  bench_comm        -> the paper's communication-saving claim, quantified
+  roofline          -> §Roofline rows from the dry-run artifacts (if present)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig1]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module name")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_adaptive_k2, bench_comm, bench_k1_s,
+                            bench_k2, bench_large_proxy, bench_layouts,
+                            bench_vs_kavg, roofline)
+    suites = [
+        ("bench_k2", bench_k2.run),
+        ("bench_k1_s", bench_k1_s.run),
+        ("bench_vs_kavg", bench_vs_kavg.run),
+        ("bench_large_proxy", bench_large_proxy.run),
+        ("bench_adaptive_k2", bench_adaptive_k2.run),
+        ("bench_layouts", bench_layouts.run),
+        ("bench_comm", bench_comm.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in fn():
+                n, us, derived = row
+                print(f"{n},{us:.0f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

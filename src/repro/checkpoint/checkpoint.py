@@ -1,0 +1,80 @@
+"""Sharding-aware pytree checkpointing (npz + json manifest; no orbax here).
+
+save_checkpoint writes:
+  <dir>/manifest.json   — tree structure, shapes, dtypes, step, user metadata
+  <dir>/arrays.npz      — leaves keyed by their flattened path
+
+restore_checkpoint(dir, like=...) re-places each leaf with the sharding of
+the matching leaf in ``like`` (so a checkpoint taken on one mesh restores
+onto another — resharding happens in device_put).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0,
+                    metadata: Optional[Dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    entries = []
+    for kp, leaf in flat:
+        key = _path_str(kp)
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
+        entries.append({"path": key, "shape": list(arr.shape),
+                        "dtype": str(arr.dtype)})
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {"step": step, "entries": entries,
+                "metadata": metadata or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str) -> Dict[str, np.ndarray]:
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        return {k: z[k] for k in z.files}
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]
+
+
+def restore_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure (and shardings, if any) of ``like``."""
+    arrays = load_checkpoint(path)
+
+    def restore(kp, leaf):
+        key = _path_str(kp)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf '{key}'")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for '{key}': ckpt {arr.shape} vs "
+                f"expected {leaf.shape}")
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(sharding, "mesh"):
+            return jax.device_put(arr.astype(leaf.dtype), sharding)
+        return jax.numpy.asarray(arr, dtype=leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(restore, like)

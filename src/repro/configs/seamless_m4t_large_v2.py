@@ -1,0 +1,31 @@
+"""SeamlessM4T-Large-v2 — speech/text encoder-decoder backbone
+[arXiv:2308.11596].
+
+The mel-spectrogram + conformer conv frontend is STUBBED per assignment:
+``input_specs`` feeds precomputed frame embeddings [B, T_frames, d_model]
+into the 24-layer text/speech encoder; the 24-layer decoder is fully
+implemented (self-attn + cross-attn + FFN).
+"""
+from repro.configs.base import ArchConfig, ParallelLayout, register
+
+
+@register("seamless-m4t-large-v2")
+def seamless_m4t_large_v2() -> ArchConfig:
+    return ArchConfig(
+        name="seamless-m4t-large-v2",
+        family="audio",
+        source="[arXiv:2308.11596]",
+        n_layers=24,             # decoder layers
+        n_encoder_layers=24,
+        is_encoder_decoder=True,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=256206,
+        frontend="audio_frames",
+        frontend_tokens=1024,    # stub: ~20s of speech at 50 frames/s
+        act="relu",
+        layout=ParallelLayout(groups=4, local=4, fsdp=1, tp=16, microbatch=2),
+    )

@@ -1,0 +1,55 @@
+"""K1/K2 schedules, including the Theorem-3.1 admissible K2 and an adaptive
+controller motivated by §3.3 ("adaptive choice of K2 may be better").
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import HierAvgParams
+
+
+def thm31_k2(T: int, P: int, B: int) -> int:
+    """K2 = T^{1/4} / (PB)^{3/4} — the largest interval that preserves the
+    O(1/sqrt(PBT)) rate (Theorem 3.1, eq. 3.3)."""
+    return max(1, int(round(T ** 0.25 / (P * B) ** 0.75)))
+
+
+def thm31_gamma(P: int, B: int, T: int) -> float:
+    """gamma = sqrt(PB/T) (Theorem 3.1, eq. 3.3) — parallelism-scaled step."""
+    return math.sqrt(P * B / T)
+
+
+@dataclass
+class AdaptiveK2:
+    """Far-from-optimum => large K2 (Thm 3.4 intuition: condition (3.11) holds
+    when F(w1)-F* is large); near convergence => shrink K2 toward K1.
+
+    A simple multiplicative controller on the observed training loss:
+    K2 ladder descends when the loss drops below fractions of its initial
+    value.  Deterministic, cheap, and documented as heuristic.
+    """
+
+    k1: int
+    k2_max: int
+    k2_min: Optional[int] = None
+    _loss0: Optional[float] = None
+
+    def __post_init__(self):
+        self.k2_min = self.k2_min or self.k1
+
+    def k2_for(self, loss: float) -> int:
+        if self._loss0 is None:
+            self._loss0 = max(loss, 1e-9)
+        frac = max(loss, 1e-9) / self._loss0
+        # frac 1.0 -> k2_max ; frac -> 0 shrinks to k2_min, in powers of two
+        span = max(1, int(math.log2(max(2, self.k2_max // self.k2_min))))
+        level = min(span, max(0, int(-math.log2(max(frac, 1e-9)))))
+        k2 = max(self.k2_min, self.k2_max >> level)
+        # keep divisibility K1 | K2
+        k2 = max(self.k1, (k2 // self.k1) * self.k1)
+        return k2
+
+    def params_for(self, loss: float) -> HierAvgParams:
+        return HierAvgParams(k1=self.k1, k2=self.k2_for(loss))

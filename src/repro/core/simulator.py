@@ -1,0 +1,119 @@
+"""Single-device Hier-AVG simulator.
+
+Runs P learners on one CPU device with the *same* stacked-learner code as
+the distributed trainer (core/hier_avg.py) — only the shardings are absent.
+Used by the paper-validation benchmarks (K2 / K1 / S sweeps, vs-K-AVG) and
+the convergence tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HierAvgParams
+from repro.core.baselines import make_kavg_round, make_sync_sgd_round
+from repro.core.hier_avg import TrainState, init_state, make_hier_round
+from repro.core.topology import HierTopology, unstack_first
+from repro.optim import Optimizer, sgd
+
+
+@dataclasses.dataclass
+class SimResult:
+    losses: np.ndarray          # per-round mean training loss
+    accs: np.ndarray            # per-round mean training accuracy
+    eval_losses: np.ndarray     # per-round eval loss of the averaged model
+    eval_accs: np.ndarray
+    grad_sq_norms: np.ndarray   # ||grad F(w~_n)||^2 proxy at global syncs
+    state: TrainState
+
+    @property
+    def final_eval_acc(self) -> float:
+        return float(self.eval_accs[-1])
+
+
+class Simulator:
+    """Hier-AVG / K-AVG / sync-SGD on one device.
+
+    loss_fn(params, batch) -> (loss, metrics with 'loss' and 'accuracy').
+    sample_batch(key, n) -> batch with leading dim n (token/example axis 0 on
+    every leaf).
+    """
+
+    def __init__(self, loss_fn: Callable, init_fn: Callable,
+                 sample_batch: Callable, *, topo: HierTopology,
+                 hier: HierAvgParams, optimizer: Optional[Optimizer] = None,
+                 algo: str = "hier", per_learner_batch: int = 32,
+                 eval_batch: Optional[Any] = None, seed: int = 0):
+        self.loss_fn = loss_fn
+        self.init_fn = init_fn
+        self.sample = sample_batch
+        self.topo = topo
+        self.hier = hier
+        self.optimizer = optimizer or sgd(0.1)
+        self.B = per_learner_batch
+        self.eval_batch = eval_batch
+        self.key = jax.random.PRNGKey(seed)
+        if algo == "hier":
+            rnd = make_hier_round(loss_fn, self.optimizer, hier)
+        elif algo == "kavg":
+            rnd = make_kavg_round(loss_fn, self.optimizer, hier.k2)
+        elif algo == "sync":
+            rnd = make_sync_sgd_round(loss_fn, self.optimizer)
+        else:
+            raise ValueError(algo)
+        self.round_fn = jax.jit(rnd)
+        self._eval = jax.jit(lambda p, b: self.loss_fn(p, b))
+        self._gsq = jax.jit(self._grad_sq)
+
+    def _grad_sq(self, params1, batch):
+        g = jax.grad(lambda p: self.loss_fn(p, batch)[0])(params1)
+        return sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                   for x in jax.tree.leaves(g))
+
+    def _round_batch(self, key):
+        n = self.hier.k2 * self.topo.n_learners * self.B
+        batch = self.sample(key, n)
+        shape = (self.hier.beta, self.hier.k1) + self.topo.shape + (self.B,)
+        return jax.tree.map(
+            lambda x: x.reshape(shape + x.shape[1:]), batch)
+
+    def run(self, n_rounds: int, key=None) -> SimResult:
+        key = self.key if key is None else key
+        k_init, key = jax.random.split(key)
+        state = init_state(self.topo, self.init_fn, self.optimizer, k_init)
+        losses, accs, elosses, eaccs, gsq = [], [], [], [], []
+        for r in range(n_rounds):
+            key, kb = jax.random.split(key)
+            state, metrics = self.round_fn(state, self._round_batch(kb))
+            losses.append(float(metrics["loss"]))
+            accs.append(float(metrics.get("accuracy", jnp.nan)))
+            p1 = unstack_first(state.params)
+            if self.eval_batch is not None:
+                el, em = self._eval(p1, self.eval_batch)
+                elosses.append(float(el))
+                eaccs.append(float(em.get("accuracy", jnp.nan)))
+                gsq.append(float(self._gsq(p1, self.eval_batch)))
+        return SimResult(np.array(losses), np.array(accs),
+                         np.array(elosses), np.array(eaccs),
+                         np.array(gsq), state)
+
+
+def run_algo_comparison(loss_fn, init_fn, sample_batch, eval_batch, *,
+                        variants: Dict[str, Dict], n_rounds: int,
+                        per_learner_batch: int = 32, seed: int = 0
+                        ) -> Dict[str, SimResult]:
+    """Run several (algo, topo, hier) variants with the same seed/data."""
+    out = {}
+    for name, spec in variants.items():
+        sim = Simulator(loss_fn, init_fn, sample_batch,
+                        topo=spec["topo"], hier=spec["hier"],
+                        optimizer=spec.get("optimizer"),
+                        algo=spec.get("algo", "hier"),
+                        per_learner_batch=per_learner_batch,
+                        eval_batch=eval_batch, seed=seed)
+        out[name] = sim.run(n_rounds)
+    return out

@@ -1,0 +1,172 @@
+"""Numeric evaluators of the paper's bounds and conditions.
+
+These power the theory-validation tests and benchmarks: we check the paper's
+*claims about its own bounds* (monotonicity in K1/S, the K2>1 condition, the
+Hier-vs-K-AVG dominance region) exactly as stated, and we expose a
+communication-cost model for the "trade local for global" accounting.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+# --------------------------------------------------------------------- #
+# Theorem 3.1 — convergence bound under the w-bar metric
+# --------------------------------------------------------------------- #
+
+def thm31_bound(F0_minus_Fstar: float, L: float, M: float, M_G: float,
+                gamma: float, K2: int, P: int, B: int, T: int) -> float:
+    """(3.2):  2(F0-F*)/(gamma T) + 4 L^2 gamma^2 K2^2 M_G^2 + L gamma M/(PB)."""
+    return (2.0 * F0_minus_Fstar / (gamma * T)
+            + 4.0 * L ** 2 * gamma ** 2 * K2 ** 2 * M_G ** 2
+            + L * gamma * M / (P * B))
+
+
+def thm31_rate_at_optimum(F0_minus_Fstar: float, L: float, M: float,
+                          M_G: float, P: int, B: int, T: int) -> float:
+    """(3.4) with gamma=sqrt(PB/T), K2=T^.25/(PB)^.75 — the O(1/sqrt(PBT))
+    constant."""
+    return (2.0 * F0_minus_Fstar + 4.0 * L ** 2 * M_G ** 2 + L * M) \
+        / math.sqrt(P * B * T)
+
+
+# --------------------------------------------------------------------- #
+# Theorem 3.2 — bound under the w-tilde metric (captures K1 and S)
+# --------------------------------------------------------------------- #
+
+def third_term_poly(K2: int, K1: int, S: int) -> float:
+    """The K1/S-dependent polynomial in (3.6):
+    (K2-K1)(4K2+K1-3)/S + (K1-1)(3K2+K1-2)."""
+    return ((K2 - K1) * (4 * K2 + K1 - 3) / S
+            + (K1 - 1) * (3 * K2 + K1 - 2))
+
+
+def thm32_bound(F1_minus_Fstar: float, L: float, M: float, gamma: float,
+                K1: int, K2: int, S: int, P: int, B: int, N: int,
+                delta: float = 0.5) -> float:
+    """(3.6) with delta = L^2 gamma^2 (1+delta_{grad,w}) in (0,1)."""
+    assert 0.0 < delta < 1.0
+    denom = K2 - delta
+    return (2.0 * F1_minus_Fstar / (N * denom * gamma)
+            + L * gamma * M * K2 ** 2 / (P * B * denom)
+            + L ** 2 * gamma ** 2 * M * K2 / (12.0 * B * denom)
+            * third_term_poly(K2, K1, S))
+
+
+def thm32_condition(L: float, gamma: float, K2: int,
+                    delta_grad_w: float = 0.0) -> bool:
+    """(3.5): 1 - L^2 g^2 (K2(K2-1)/2 - 1 - d) - L g K2 >= 0."""
+    return (1.0 - L ** 2 * gamma ** 2
+            * (K2 * (K2 - 1) / 2.0 - 1.0 - delta_grad_w)
+            - L * gamma * K2) >= 0.0
+
+
+# --------------------------------------------------------------------- #
+# Theorem 3.4 — when is some K2 > 1 faster (fixed data budget T = N*K2)
+# --------------------------------------------------------------------- #
+
+def thm34_terms(F1_minus_Fstar: float, L: float, M: float, gamma: float,
+                T: int, P: int, B: int) -> Tuple[float, float, float]:
+    """alpha, beta, eta of the proof of Thm 3.4."""
+    alpha = 2.0 * F1_minus_Fstar / (T * gamma)
+    beta = L * gamma * M / (P * B)
+    eta = L ** 2 * gamma ** 2 * M / (12.0 * B)
+    return alpha, beta, eta
+
+
+def thm34_condition(F1_minus_Fstar: float, L: float, M: float, gamma: float,
+                    T: int, P: int, B: int, S: int,
+                    delta: float = 0.5) -> bool:
+    """(3.11): delta*alpha/(1-delta) > 2*beta + 12*eta/S  =>  K2*>1."""
+    alpha, beta, eta = thm34_terms(F1_minus_Fstar, L, M, gamma, T, P, B)
+    return delta * alpha / (1.0 - delta) > 2.0 * beta + 12.0 * eta / S
+
+
+def thm34_objective(K2: int, K1: int, S: int, alpha: float, beta: float,
+                    eta: float, delta: float = 0.5) -> float:
+    """B(K2) = f(K2) * g(K2) from the proof (fixed data budget)."""
+    K1_eff = min(K1, K2)
+    f = alpha + beta * K2 + eta * third_term_poly(K2, K1_eff, S)
+    g = K2 / (K2 - delta)
+    return f * g
+
+
+def optimal_k2(K1: int, S: int, alpha: float, beta: float, eta: float,
+               delta: float = 0.5, k2_max: int = 512) -> int:
+    """Numeric argmin of B(K2) over multiples of K1 (and K2=1)."""
+    candidates = [1] + [k for k in range(K1, k2_max + 1, K1)]
+    return min(candidates,
+               key=lambda k: thm34_objective(k, K1, S, alpha, beta, eta,
+                                             delta))
+
+
+# --------------------------------------------------------------------- #
+# Theorem 3.6 — Hier-AVG (K2=(1+a)K, K1=1, S=4) vs K-AVG (K)
+# --------------------------------------------------------------------- #
+
+def thm36_hier_bound(K: int, a: float, alpha: float, eta: float,
+                     delta: float = 0.5) -> float:
+    """H(K) from the proof of Thm 3.6 (second bound term dropped,
+    L*gamma*P >> 1 regime).  eta here is L^2 g^2 M / (6B)."""
+    Kp = (1.0 + a) * K
+    f1 = alpha + eta * ((Kp - 1.0) * (2.0 * Kp - 1.0) / 4.0)
+    g1 = Kp / (Kp - delta)
+    return f1 * g1
+
+
+def thm36_kavg_bound(K: int, alpha: float, eta: float,
+                     delta: float = 0.5) -> float:
+    """chi(K) for K-AVG in the same regime."""
+    f2 = alpha + eta * (K - 1.0) * (2.0 * K - 1.0)
+    g2 = K / (K - delta)
+    return f2 * g2
+
+
+# --------------------------------------------------------------------- #
+# Communication-cost model (the paper's motivation, made quantitative)
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class CommModel:
+    """Ring all-reduce cost model: reducing V bytes over n participants on a
+    fabric of bandwidth bw costs 2V(n-1)/(n*bw) seconds (+ latency per
+    step).  Local reductions ride the fast fabric (intra-pod ICI), global
+    reductions the slow one (inter-pod DCI / the paper's InfiniBand)."""
+
+    fast_bw: float = 50.0e9          # intra-pod per-link (ICI)
+    slow_bw: float = 2.5e9           # cross-pod effective per-chip (DCI)
+    latency: float = 5.0e-6
+
+    def allreduce_time(self, bytes_: float, n: int, bw: float) -> float:
+        if n <= 1:
+            return 0.0
+        steps = 2 * (n - 1)
+        return 2.0 * bytes_ * (n - 1) / (n * bw) + steps * self.latency
+
+
+def comm_per_k2_steps(model_bytes: float, hier_k1: int, hier_k2: int,
+                      P: int, S: int, cm: Optional[CommModel] = None
+                      ) -> Tuple[float, float]:
+    """(local_seconds, global_seconds) spent on reductions per K2-step cycle
+    for Hier-AVG; K-AVG(K) is the special case k1=k2=K, S=1."""
+    cm = cm or CommModel()
+    n_local = hier_k2 // hier_k1 - 1 if hier_k1 < hier_k2 else 0
+    # the local reduction right before the global one is subsumed by it
+    local = n_local * cm.allreduce_time(model_bytes, S, cm.fast_bw)
+    glob = cm.allreduce_time(model_bytes, P, cm.slow_bw)
+    return local, glob
+
+
+def comm_advantage(model_bytes: float, K: int, a: float, P: int, S: int = 4,
+                   cm: Optional[CommModel] = None) -> float:
+    """Seconds saved per *data-equivalent* K2 window by Hier-AVG with
+    K2=(1+a)K, K1=1, S=4 versus K-AVG(K) (Thm 3.6 setup)."""
+    cm = cm or CommModel()
+    k2 = int(round((1 + a) * K))
+    loc, glo = comm_per_k2_steps(model_bytes, 1, k2, P, S, cm)
+    hier_per_step = (loc + glo) / k2
+    _, glo_k = comm_per_k2_steps(model_bytes, K, K, P, 1, cm)
+    kavg_per_step = glo_k / K
+    return kavg_per_step - hier_per_step

@@ -1,0 +1,123 @@
+"""Learner topology for Hier-AVG.
+
+The paper's communicators:
+  * P  learners total
+  * clusters of S learners each do the *local* reduction
+  * all P learners do the *global* reduction
+
+We realize a learner as a coordinate on the (pod, group, local) axes of the
+training mesh; ``local`` has size S, ``group`` counts clusters per pod, and
+``pod`` counts pods.  All parameter / optimizer-state leaves carry these
+three leading axes (the *stacked-learner* layout), so:
+
+  local  reduction == mean over the ``local``  array axis (index 2)
+  global reduction == mean over ``pod, group, local`` (indices 0, 1, 2)
+
+GSPMD lowers those means to grouped all-reduces over exactly the matching
+mesh axes — intra-pod ICI for local, cross-pod DCI for global.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+AXIS_POD = "pod"
+AXIS_GROUP = "group"
+AXIS_LOCAL = "local"
+AXIS_FSDP = "fsdp"
+AXIS_TP = "model"
+
+LEARNER_AXES: Tuple[str, str, str] = (AXIS_POD, AXIS_GROUP, AXIS_LOCAL)
+LOCAL_ARRAY_AXES: Tuple[int, ...] = (2,)
+GLOBAL_ARRAY_AXES: Tuple[int, ...] = (0, 1, 2)
+
+
+@dataclass(frozen=True)
+class HierTopology:
+    """(pods, groups, local) learner grid; ``local`` is the paper's S."""
+
+    pods: int = 1
+    groups: int = 1
+    local: int = 1
+
+    def __post_init__(self):
+        assert self.pods >= 1 and self.groups >= 1 and self.local >= 1
+
+    @property
+    def n_learners(self) -> int:  # the paper's P
+        return self.pods * self.groups * self.local
+
+    @property
+    def s(self) -> int:          # the paper's S
+        return self.local
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        return (self.pods, self.groups, self.local)
+
+    # local clusters never span pods: cluster id = (pod, group)
+    @property
+    def n_clusters(self) -> int:
+        return self.pods * self.groups
+
+    def describe(self) -> str:
+        return (f"P={self.n_learners} learners = {self.pods} pod(s) x "
+                f"{self.groups} cluster(s)/pod x S={self.local}")
+
+
+def stack_like(topo: HierTopology, tree):
+    """Replicate a single-learner pytree to the stacked layout
+    [pods, G, S, ...] (paper: all learners start from the same w_1)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, topo.shape + x.shape), tree)
+
+
+def stack_distinct(topo: HierTopology, init_fn, key):
+    """Independent per-learner init (for ablations): vmap init over learners."""
+    keys = jax.random.split(key, topo.n_learners)
+    keys = keys.reshape(topo.shape + keys.shape[1:])
+    f = init_fn
+    for _ in range(3):
+        f = jax.vmap(f)
+    return f(keys)
+
+
+def unstack_first(tree):
+    """Extract learner (0,0,0)'s copy (post-global-average they are equal)."""
+    return jax.tree.map(lambda x: x[0, 0, 0], tree)
+
+
+def average_over(tree, axes: Tuple[int, ...], constraint_fn=None):
+    """Mean over stacked learner axes, broadcast back (== grouped all-reduce).
+
+    ``constraint_fn(leaf) -> leaf`` optionally re-pins the sharding after the
+    broadcast (used by the distributed launcher to keep GSPMD honest).
+    """
+    def avg(x):
+        m = jnp.mean(x, axis=axes, keepdims=True)
+        y = jnp.broadcast_to(m, x.shape)
+        return y
+
+    out = jax.tree.map(avg, tree)
+    if constraint_fn is not None:
+        out = constraint_fn(out)
+    return out
+
+
+def local_average(tree, constraint_fn=None):
+    """The paper's local reduction: mean within each cluster of S learners."""
+    return average_over(tree, LOCAL_ARRAY_AXES, constraint_fn)
+
+
+def global_average(tree, constraint_fn=None):
+    """The paper's global reduction: mean over all P learners."""
+    return average_over(tree, GLOBAL_ARRAY_AXES, constraint_fn)
+
+
+def pod_average(tree, constraint_fn=None):
+    """Beyond-paper: intra-pod reduction (axes group+local, not pod) —
+    a middle hierarchy level matching the ICI/DCI boundary."""
+    return average_over(tree, (1, 2), constraint_fn)

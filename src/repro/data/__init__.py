@@ -1,0 +1,4 @@
+from repro.data.synthetic import (gaussian_mixture_batch,  # noqa: F401
+                                  markov_lm_batch, make_markov_task,
+                                  make_classification_task)
+from repro.data.loader import HierDataLoader  # noqa: F401

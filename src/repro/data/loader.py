@@ -1,0 +1,57 @@
+"""Sharded data loader for Hier-AVG rounds.
+
+Responsibilities:
+  * per-learner INDEPENDENT streams — learner (p, g, s) draws from
+    ``fold_in(round_key, learner_id)``; the paper's xi^j_{k,s} i.i.d.
+    assumption is realized exactly;
+  * round batching — leaves shaped [beta, K1, pods, G, S, B, ...] to feed
+    ``make_hier_round``;
+  * optional device placement with the launcher's NamedShardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HierAvgParams
+from repro.core.topology import HierTopology
+
+
+class HierDataLoader:
+    """sample_fn(key, n) -> batch with leading example dim n."""
+
+    def __init__(self, sample_fn: Callable, *, topo: HierTopology,
+                 hier: HierAvgParams, per_learner_batch: int,
+                 seed: int = 0, shardings: Optional[Any] = None):
+        self.sample = sample_fn
+        self.topo = topo
+        self.hier = hier
+        self.B = per_learner_batch
+        self.key = jax.random.PRNGKey(seed)
+        self.shardings = shardings
+        self._round = 0
+
+    @property
+    def tokens_per_round(self) -> int:
+        return self.hier.k2 * self.topo.n_learners * self.B
+
+    def next_round(self) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(self.key, self._round)
+        self._round += 1
+        shape = (self.hier.beta, self.hier.k1) + self.topo.shape
+        # one independent key per (step, learner) cell
+        n_cells = self.hier.k2 * self.topo.n_learners
+        keys = jax.random.split(key, n_cells)
+        flat = [self.sample(k, self.B) for k in keys]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *flat)
+        batch = jax.tree.map(
+            lambda x: x.reshape(shape + (self.B,) + x.shape[2:]), batch)
+        if self.shardings is not None:
+            batch = jax.device_put(batch, self.shardings)
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        while True:
+            yield self.next_round()

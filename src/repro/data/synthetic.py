@@ -1,0 +1,77 @@
+"""Synthetic but *learnable* data sources (offline container — no CIFAR).
+
+Hier-AVG's analysis assumes each learner draws i.i.d. samples xi from the
+same distribution; these generators are pure functions of a PRNG key, so
+per-learner independence is exactly a ``fold_in`` (see loader.py).
+
+  * markov LM: tokens follow a fixed random first-order Markov chain —
+    cross-entropy has a known floor (the chain's conditional entropy) so
+    convergence curves are interpretable.
+  * gaussian-mixture classification: the CIFAR stand-in for the paper's
+    K2/K1/S sweeps (fast enough for P up to 64 learners on one CPU core).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_markov_task(vocab: int, temperature: float = 1.5, seed: int = 1234
+                     ) -> Tuple[jax.Array, float]:
+    """Returns (transition logits [V, V], per-token entropy floor in nats)."""
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (vocab, vocab)) * temperature
+    logp = jax.nn.log_softmax(logits, -1)
+    p = jnp.exp(logp)
+    cond_ent = -jnp.sum(p * logp, -1)                 # [V]
+    # stationary distribution via power iteration
+    pi = jnp.ones((vocab,)) / vocab
+    for _ in range(64):
+        pi = pi @ p
+    floor = float(jnp.sum(pi * cond_ent))
+    return logits, floor
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _markov_sample(key, batch: int, seq: int, logits) -> jax.Array:
+    vocab = logits.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (batch,), 0, vocab)
+
+    def step(tok, k):
+        nxt = jax.random.categorical(k, logits[tok])
+        return nxt, nxt
+
+    keys = jax.random.split(key, seq - 1)
+    _, rest = jax.lax.scan(step, first, keys)
+    return jnp.concatenate([first[None], rest], 0).T   # [batch, seq]
+
+
+def markov_lm_batch(key, n: int, seq: int, logits) -> Dict[str, jax.Array]:
+    toks = _markov_sample(key, n, seq + 1, logits)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_classification_task(in_dim: int, n_classes: int, seed: int = 4321,
+                             noise: float = 0.6) -> Callable:
+    """Gaussian mixture: class means on a random simplex; returns sampler
+    sample(key, n) -> {'x': [n, in_dim], 'y': [n]}."""
+    key = jax.random.PRNGKey(seed)
+    means = jax.random.normal(key, (n_classes, in_dim))
+    means = means / jnp.linalg.norm(means, axis=-1, keepdims=True) * 2.0
+
+    def sample(k, n: int) -> Dict[str, jax.Array]:
+        k1, k2 = jax.random.split(k)
+        y = jax.random.randint(k1, (n,), 0, n_classes)
+        x = means[y] + noise * jax.random.normal(k2, (n, in_dim))
+        return {"x": x, "y": y}
+
+    return sample
+
+
+def gaussian_mixture_batch(key, n: int, in_dim: int = 64,
+                           n_classes: int = 10) -> Dict[str, jax.Array]:
+    return make_classification_task(in_dim, n_classes)(key, n)

@@ -1,0 +1,43 @@
+"""Public jit'd wrappers for the Pallas kernels with impl dispatch.
+
+``impl``:
+  * "xla"              — pure-jnp oracle (kernels/ref.py); default on CPU
+  * "pallas"           — compiled Pallas kernel (TPU target)
+  * "pallas_interpret" — Pallas kernel body interpreted in Python on CPU
+                         (correctness validation without hardware)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None, impl: str = "xla",
+                    interpret: Optional[bool] = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Dispatchable attention: q [B,S,Hq,D], k/v [B,T,Hkv,D]."""
+    if interpret is not None:  # legacy call style from models.attention
+        impl = "pallas_interpret" if interpret else "pallas"
+    if impl == "xla":
+        return kref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window, scale=scale)
+    from repro.kernels.flash_attention import flash_attention as fa
+    return fa(q, k, v, causal=causal, window=window, scale=scale,
+              block_q=block_q, block_k=block_k,
+              interpret=(impl == "pallas_interpret"))
+
+
+def rwkv6_wkv(r, k, v, w, u, state, *, impl: str = "xla",
+              block_t: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """Dispatchable WKV6: r/k/v/w [B,S,H,D], u [H,D], state [B,H,D,D]."""
+    if impl == "xla":
+        return kref.rwkv6_wkv_ref(r, k, v, w, u, state)
+    from repro.kernels.rwkv6_wkv import rwkv6_wkv as wkv
+    return wkv(r, k, v, w, u, state, block_t=block_t,
+               interpret=(impl == "pallas_interpret"))

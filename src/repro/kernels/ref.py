@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics of record: kernel tests sweep shapes/dtypes and
+assert_allclose against these functions, and the XLA model paths call them
+directly (``impl="xla"``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Reference attention.
+
+    q [B, S, Hq, D]; k/v [B, T, Hkv, D] with Hq % Hkv == 0.
+    Returns [B, S, Hq, D] in q.dtype.
+    """
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        m = kpos <= qpos
+        if window:
+            m &= (qpos - kpos) < window
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def rwkv6_wkv_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                  u: jax.Array, state: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """RWKV-6 WKV recurrence, scanned over time in fp32.
+
+    r/k/v/w: [B, S, H, D]; u: [H, D]; state: [B, H, D, D] (indexed [j, i]).
+
+        y_t[i]  = sum_j r_t[j] * (S[j,i] + u[j] * k_t[j] * v_t[i])
+        S'[j,i] = w_t[j] * S[j,i] + k_t[j] * v_t[i]
+
+    Returns (y [B, S, H, D] in r.dtype, final state fp32).
+    """
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp          # each [B, H, D]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,D,D]
+        y = jnp.einsum("bhj,bhji->bhi", r_t,
+                       S + uf[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(x.swapaxes(0, 1) for x in (rf, kf, vf, wf))  # [S,B,H,D]
+    final, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), final

@@ -1,0 +1,304 @@
+"""Dry-run case construction: (arch x input shape x mesh) -> a lowerable
+jitted program with ShapeDtypeStruct inputs and NamedSharding in_shardings.
+
+No arrays are ever allocated here: parameter/cache structures come from
+``jax.eval_shape`` over the real init functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, HierAvgParams, InputShape,
+                                INPUT_SHAPES, ParallelLayout)
+from repro.core.hier_avg import init_state, make_hier_round
+from repro.core.topology import HierTopology
+from repro.launch.mesh import PODS_MULTI, make_hier_mesh, make_production_mesh
+from repro.models import build
+from repro.models.stubs import train_batch_specs
+from repro.optim import sgd
+from repro.parallel.sharding import PartitionRules, param_pspecs, safe_pspec
+
+
+@dataclasses.dataclass
+class DryrunCase:
+    name: str
+    mesh: Mesh
+    jitted: Any                 # jax.jit(...) ready to .lower(*arg_specs)
+    arg_specs: Tuple            # ShapeDtypeStructs
+    steps: int                  # SGD steps (or decode steps) per program
+    notes: str = ""
+
+
+# --------------------------------------------------------------------- #
+# training case (hier mesh)
+# --------------------------------------------------------------------- #
+
+def parse_layout(spec: str) -> ParallelLayout:
+    """'GxSxFxTP[:micro]' -> ParallelLayout (hillclimb override)."""
+    micro = 1
+    if ":" in spec:
+        spec, m = spec.split(":")
+        micro = int(m)
+    g, s, f, tp = (int(x) for x in spec.split("x"))
+    return ParallelLayout(groups=g, local=s, fsdp=f, tp=tp,
+                          microbatch=micro)
+
+
+def default_hier_params(cfg: ArchConfig) -> HierAvgParams:
+    """Paper-faithful defaults: K1=4, K2=8 (beta=2) — small enough to keep
+    the lowered round compact, large enough that local+global reductions
+    both appear in the collective schedule."""
+    return HierAvgParams(k1=4, k2=8)
+
+
+def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
+               hier: Optional[HierAvgParams] = None,
+               remat: bool = True,
+               param_dtype=jnp.bfloat16,
+               sync_opt_state: bool = False,
+               use_constraints: bool = True) -> DryrunCase:
+    hier = hier or default_hier_params(cfg)
+    lay = cfg.layout
+    mesh = make_hier_mesh(lay, multi_pod=multi_pod)
+    pods = PODS_MULTI if multi_pod else 1
+    topo = HierTopology(pods=pods, groups=lay.groups, local=lay.local)
+
+    bundle = build(cfg, param_dtype=param_dtype, remat=remat)
+    optimizer = sgd(0.1)          # paper: plain SGD, step-decayed lr
+
+    # ---- state structure without allocation ----
+    state_struct = jax.eval_shape(
+        lambda k: init_state(topo, bundle.init, optimizer, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    rules = PartitionRules()
+    pspecs = param_pspecs(state_struct.params, mesh, stacked_learners=True,
+                          rules=rules)
+    opt_specs = jax.tree.map(
+        lambda leaf: safe_pspec(
+            P(*(("pod", "group", "local") + (None,) * (leaf.ndim - 3))),
+            leaf.shape, mesh),
+        state_struct.opt_state) if jax.tree.leaves(state_struct.opt_state) \
+        else state_struct.opt_state
+    # momentum mirrors params: reuse param specs when structures match
+    try:
+        opt_specs = jax.tree.map(lambda s: s, pspecs) \
+            if (jax.tree_util.tree_structure(state_struct.opt_state)
+                == jax.tree_util.tree_structure(state_struct.params)) \
+            else opt_specs
+    except Exception:
+        pass
+    state_specs = state_struct.__class__(pspecs, opt_specs, P())
+    state_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    # ---- per-learner batch ----
+    per_learner_b = shape.global_batch // topo.n_learners
+    assert per_learner_b >= 1, (cfg.name, shape.name, topo)
+    inner = train_batch_specs(cfg, per_learner_b, shape.seq_len,
+                              dtype=param_dtype)
+    lead = (hier.beta, hier.k1) + topo.shape
+
+    def wrap(s):
+        return jax.ShapeDtypeStruct(lead + s.shape, s.dtype)
+
+    batch_specs = {k: wrap(v) for k, v in inner.items()}
+
+    def bspec(s):
+        tail = ("fsdp",) + (None,) * (len(s.shape) - len(lead) - 1)
+        return safe_pspec(P(*((None, None, "pod", "group", "local") + tail)),
+                          s.shape, mesh)
+
+    batch_shardings = {k: NamedSharding(mesh, bspec(v))
+                       for k, v in batch_specs.items()}
+
+    constraint_fn = None
+    if use_constraints:
+        param_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                       pspecs, is_leaf=lambda x:
+                                       isinstance(x, P))
+
+        def constraint_fn(tree):
+            try:
+                return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                                    param_shardings)
+            except Exception:
+                return tree
+
+    round_fn = make_hier_round(bundle.loss_fn, optimizer, hier,
+                               sync_opt_state=sync_opt_state,
+                               constraint_fn=constraint_fn,
+                               microbatch=lay.microbatch)
+
+    jitted = jax.jit(round_fn,
+                     in_shardings=(state_shardings, batch_shardings),
+                     out_shardings=(state_shardings, None),
+                     donate_argnums=(0,))
+    return DryrunCase(
+        name=f"{cfg.name}:{shape.name}:{'2pod' if multi_pod else '1pod'}",
+        mesh=mesh, jitted=jitted, arg_specs=(state_struct, batch_specs),
+        steps=hier.k2,
+        notes=f"hier_round K1={hier.k1} K2={hier.k2} "
+              f"{topo.describe()} fsdp={lay.fsdp} tp={lay.tp} "
+              f"B/learner={per_learner_b}")
+
+
+# --------------------------------------------------------------------- #
+# serving cases (production mesh)
+# --------------------------------------------------------------------- #
+
+_SERVE_AXIS_MAP_1POD = {"pod": None, "group": None, "local": None,
+                        "fsdp": "data", "model": "model"}
+
+
+def _serve_param_shardings(params_struct, mesh: Mesh, multi_pod: bool):
+    amap = dict(_SERVE_AXIS_MAP_1POD)
+    if multi_pod:
+        amap["fsdp"] = ("pod", "data")
+    rules = PartitionRules(axis_map=amap)
+    specs = param_pspecs(params_struct, mesh, stacked_learners=False,
+                         rules=rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_axis(mesh: Mesh, multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def _cache_pspec(path: str, leaf, mesh: Mesh, batch: int, multi_pod: bool
+                 ) -> P:
+    """Heuristic cache sharding:
+    batch dim over data (when divisible), heads/state over model, and for
+    batch-1 long-context the sequence dim over data."""
+    bax = _batch_axis(mesh, multi_pod)
+    ndim = leaf.ndim
+    if ndim == 0:          # pos counters
+        return P()
+    if ndim == 1:          # stacked pos [L]
+        return P(None)
+    # leading dim is the layer stack L; dim 1 is batch
+    spec = [None] * ndim
+    spec[1] = bax
+    name = path.split("/")[-1]
+    tp = mesh.shape["model"]
+    if name in ("k", "v", "cross_k", "cross_v") and ndim >= 5:
+        # [L,B,T,H,D]: shard heads over TP when divisible; otherwise shard
+        # HEAD_DIM over TP (keeps the per-step cache write local; avoids
+        # 16x cache replication for kv-head counts < 16)
+        if leaf.shape[3] % tp == 0:
+            spec[3] = "model"
+        elif leaf.shape[4] % tp == 0:
+            spec[4] = "model"
+        elif leaf.shape[2] % tp == 0:
+            spec[2] = "model"
+        if batch == 1:
+            spec[1] = None
+            spec[2] = bax if leaf.shape[2] % 16 == 0 else None
+    elif name in ("ckv", "k_rope") and ndim >= 4:
+        if leaf.shape[3] % tp == 0:
+            spec[3] = "model"      # [L,B,T,lora] — latent dim over TP
+        if batch == 1:
+            spec[1] = None
+            spec[2] = bax if leaf.shape[2] % 16 == 0 else None
+    elif name == "wkv" and ndim >= 3:
+        spec[2] = "model"          # [L,B,H,D,D]
+    elif name in ("ssm", "conv") and ndim >= 3:
+        spec[2] = "model" if name == "ssm" else None  # [L,B,Ci,N]/[L,B,K,Ci]
+        if name == "conv" and ndim >= 4:
+            spec[3] = "model"
+    elif name in ("tm_shift", "cm_shift") and ndim >= 3:
+        spec[2] = "model"          # [L,B,d]
+    return safe_pspec(P(*spec), leaf.shape, mesh)
+
+
+def decode_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
+                param_dtype=jnp.bfloat16,
+                cache_dtype=jnp.bfloat16) -> DryrunCase:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rolling = (shape.name == "long_500k"
+               and cfg.family in ("dense", "moe", "vlm", "audio")
+               and not cfg.kv_lora_rank)
+    bundle = build(cfg, param_dtype=param_dtype, rolling_decode=rolling,
+                   cache_dtype=cache_dtype)
+    B = shape.global_batch
+    max_len = shape.seq_len
+
+    params_struct = jax.eval_shape(
+        bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_shard = _serve_param_shardings(params_struct, mesh, multi_pod)
+
+    cache_struct = jax.eval_shape(
+        functools.partial(bundle.init_cache, B, max_len))
+    c_shard = jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(
+            mesh, _cache_pspec("/".join(str(getattr(k, "key", k))
+                                        for k in kp), leaf, mesh, B,
+                               multi_pod)),
+        cache_struct)
+
+    bax = _batch_axis(mesh, multi_pod)
+    tok_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_shard = NamedSharding(mesh, safe_pspec(P(bax), (B,), mesh))
+
+    def serve_step(params, tokens, cache):
+        return bundle.decode_step(params, tokens, cache)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_shard, tok_shard, c_shard),
+                     out_shardings=(None, c_shard),
+                     donate_argnums=(2,))   # cache updated in place
+    kind = ("rolling-window" if rolling else
+            "mla-latent" if cfg.kv_lora_rank else
+            "state" if cfg.family in ("ssm", "hybrid") else "full-kv")
+    return DryrunCase(
+        name=f"{cfg.name}:{shape.name}:{'2pod' if multi_pod else '1pod'}",
+        mesh=mesh, jitted=jitted,
+        arg_specs=(params_struct, tok_spec, cache_struct), steps=1,
+        notes=f"serve_step cache={kind} B={B} ctx={max_len}")
+
+
+def prefill_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
+                 param_dtype=jnp.bfloat16, remat: bool = True) -> DryrunCase:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = build(cfg, param_dtype=param_dtype, remat=remat)
+    B = shape.global_batch
+
+    params_struct = jax.eval_shape(
+        bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_shard = _serve_param_shardings(params_struct, mesh, multi_pod)
+
+    inner = train_batch_specs(cfg, B, shape.seq_len, dtype=param_dtype)
+    inner.pop("labels", None)
+    bax = _batch_axis(mesh, multi_pod)
+    b_shard = {k: NamedSharding(
+        mesh, safe_pspec(P(*((bax,) + (None,) * (len(v.shape) - 1))),
+                         v.shape, mesh))
+        for k, v in inner.items()}
+
+    def prefill(params, batch):
+        logits, cache = bundle.prefill(params, batch)
+        return logits
+
+    jitted = jax.jit(prefill, in_shardings=(p_shard, b_shard),
+                     out_shardings=None)
+    return DryrunCase(
+        name=f"{cfg.name}:{shape.name}:{'2pod' if multi_pod else '1pod'}",
+        mesh=mesh, jitted=jitted, arg_specs=(params_struct, inner), steps=1,
+        notes=f"prefill B={B} S={shape.seq_len}")
+
+
+def build_case(cfg: ArchConfig, shape_name: str, *, multi_pod: bool,
+               **kw) -> DryrunCase:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_case(cfg, shape, multi_pod=multi_pod, **kw)
+    if shape.kind == "prefill":
+        return prefill_case(cfg, shape, multi_pod=multi_pod)
+    return decode_case(cfg, shape, multi_pod=multi_pod)

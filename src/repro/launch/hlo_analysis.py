@@ -1,0 +1,154 @@
+"""Roofline-term extraction from compiled (SPMD-partitioned) HLO.
+
+``compiled.cost_analysis()`` reports FLOPs / bytes for the PER-DEVICE
+partitioned program; ``compiled.as_text()`` is likewise the per-device HLO,
+so collective operand shapes are per-device shards.  The three roofline
+terms (seconds) therefore come out per chip directly:
+
+  compute    = flops_per_device / peak_flops_chip
+  memory     = bytes_per_device / hbm_bw_chip
+  collective = sum over collective ops of ring-model link-bytes / link_bw
+
+Ring model per op (n = replica-group size, V = per-device payload bytes,
+payload = the op's per-device RESULT shape):
+  all-reduce        2 V (n-1)/n
+  all-gather        V (n-1)/n   (result holds all n shards; (n-1)/n received)
+  reduce-scatter    V (n-1)     (result is one shard; n-1 shard exchanges)
+  all-to-all        V (n-1)/n
+  collective-permute V
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+# TPU v5e-class constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    payload_bytes: int       # per-device operand/result bytes
+    group_size: int
+    link_bytes: float        # ring-model bytes crossing links per device
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "all-gather":
+        # payload = per-device gathered result (all n shards): recv (n-1)/n
+        return float(n - 1) / n
+    if kind == "reduce-scatter":
+        # payload = per-device scattered result shard: send/recv (n-1) shards
+        return float(n - 1)
+    if kind == "all-to-all":
+        return float(n - 1) / n
+    return 1.0  # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = None
+        kind = None
+        for k in _COLLECTIVES:
+            if f" {k}(" in line or f" {k}-start(" in line:
+                kind = k
+                break
+        if kind is None:
+            continue
+        # result shape(s): first shape token(s) after '='
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        rhs = line[eq + 1:]
+        shapes = _SHAPE_RE.findall(rhs.split(kind)[0])
+        payload = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if payload == 0:
+            continue
+        gm = _GROUP_RE.search(line)
+        if gm:
+            group = len([x for x in gm.group(1).split(",") if x.strip()])
+        else:
+            gm2 = _GROUP_RE2.search(line)
+            group = int(gm2.group(2)) if gm2 else 2
+        ops.append(CollectiveOp(kind, payload, group,
+                                payload * _ring_factor(kind, group)))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict:
+    by_kind: Dict[str, Dict] = {}
+    for o in ops:
+        d = by_kind.setdefault(o.kind, {"count": 0, "payload_bytes": 0,
+                                        "link_bytes": 0.0})
+        d["count"] += 1
+        d["payload_bytes"] += o.payload_bytes
+        d["link_bytes"] += o.link_bytes
+    return by_kind
+
+
+def roofline_terms(cost: Dict, ops: List[CollectiveOp], *,
+                   model_flops_per_device: Optional[float] = None,
+                   steps: int = 1) -> Dict:
+    """Three roofline terms in seconds (per executed program / steps)."""
+    flops = float(cost.get("flops", 0.0))
+    # 'bytes accessed' aggregates operand+output HBM traffic
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    link_bytes = sum(o.link_bytes for o in ops)
+    compute_s = flops / PEAK_FLOPS / steps
+    memory_s = bytes_ / HBM_BW / steps
+    collective_s = link_bytes / LINK_BW / steps
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    out = {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_,
+        "collective_link_bytes": link_bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": dom,
+        "steps": steps,
+    }
+    if model_flops_per_device:
+        out["model_flops_per_device"] = model_flops_per_device / steps
+        out["useful_flops_ratio"] = (model_flops_per_device / flops
+                                     if flops else 0.0)
+    return out

@@ -1,0 +1,43 @@
+"""Production meshes.
+
+``make_production_mesh`` is the target spec verbatim: a 256-chip v5e pod as
+(16, 16) ("data", "model"), or 2 pods = 512 chips as (2, 16, 16)
+("pod", "data", "model").  Serving dry-runs use it directly.
+
+``make_hier_mesh`` is the SAME device set with the 16-way data axis factored
+``groups x local x fsdp = 16`` so the Hier-AVG communicators are named mesh
+axes: local reduction = all-reduce over "local" (intra-pod ICI), global
+reduction = all-reduce over ("pod","group","local") (crosses DCI when
+multi_pod).  Chip count and ICI layout are identical to the production mesh;
+only the logical factorization of the data dimension differs.
+
+Both are FUNCTIONS so importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ParallelLayout
+
+DATA_AXIS = 16
+TP_AXIS = 16
+PODS_MULTI = 2
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (PODS_MULTI, DATA_AXIS, TP_AXIS) if multi_pod \
+        else (DATA_AXIS, TP_AXIS)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_hier_mesh(layout: ParallelLayout, *, multi_pod: bool = False):
+    layout.validate(DATA_AXIS * TP_AXIS)
+    pods = PODS_MULTI if multi_pod else 1
+    shape = (pods, layout.groups, layout.local, layout.fsdp, layout.tp)
+    axes = ("pod", "group", "local", "fsdp", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def device_count_required(*, multi_pod: bool = False) -> int:
+    return (PODS_MULTI if multi_pod else 1) * DATA_AXIS * TP_AXIS

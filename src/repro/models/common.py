@@ -1,0 +1,199 @@
+"""Shared functional building blocks for the model zoo.
+
+Everything is pure-functional: ``init_*`` returns nested-dict param pytrees,
+``apply``-style functions take (params, inputs) and return outputs.  Layer
+stacks are stored *stacked* ([n_layers, ...] leading dim) so the forward pass
+is a single ``lax.scan`` over layers — this keeps compiled HLO size constant
+in depth, which matters for the 88–95 layer archs in the pool.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------- #
+# initializers
+# --------------------------------------------------------------------- #
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init (MaxText/T5 style)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, (d_in, d_out), jnp.float32)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    # 1/sqrt(d) scale keeps tied unembedding logits O(1)
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            / math.sqrt(d)).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": ones((d,), dtype), "bias": zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# activations
+# --------------------------------------------------------------------- #
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# --------------------------------------------------------------------- #
+# RoPE and M-RoPE
+# --------------------------------------------------------------------- #
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape [head_dim // 2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """positions [...]: int -> cos/sin [..., head_dim // 2] (fp32)."""
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., n_heads, head_dim]; cos/sin broadcast [..., 1, head_dim//2].
+
+    Uses the "split-halves" convention (llama): rotate (x1, x2) halves.
+    """
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def mrope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                  sections: Tuple[int, int, int]) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: [..., 3] int (t, h, w) per token.  The head_dim//2 rotary
+    frequency channels are split into ``sections`` (t, h, w) groups, each
+    driven by its own position coordinate.
+    Returns cos/sin of shape [..., head_dim // 2].
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = rope_freqs(head_dim, theta)  # [d2]
+    # angles per coordinate: [..., 3, d2]
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    sel = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=head_dim // 2)
+    ang = jnp.take_along_axis(
+        ang, jnp.broadcast_to(sel, ang.shape[:-2] + (1, head_dim // 2)), axis=-2
+    )[..., 0, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def text_positions(batch: int, seq: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+
+
+# --------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------- #
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Token-level CE.  logits [..., V] (any dtype, upcast), labels [...]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(logits, -1) == labels) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}
+
+
+# --------------------------------------------------------------------- #
+# stacked-layer helpers
+# --------------------------------------------------------------------- #
+
+def stacked_init(init_one, key, n_layers: int) -> Params:
+    """vmap an init function over per-layer keys -> stacked pytree."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def scan_layers(body, x, stacked_params, *, remat: bool = False,
+                unroll: int = 1):
+    """Run ``body(x, layer_params) -> x`` over stacked layer params."""
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, layer_params):
+        return fn(carry, layer_params), None
+
+    out, _ = jax.lax.scan(step, x, stacked_params, unroll=unroll)
+    return out
+
+
+def scan_layers_with_cache(body, x, stacked_params, cache, *, remat: bool = False):
+    """Like scan_layers but threads a per-layer cache pytree (stacked on the
+    layer dim) through the scan: body(x, layer_params, layer_cache) ->
+    (x, new_layer_cache)."""
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, inp):
+        layer_params, layer_cache = inp
+        new_carry, new_cache = fn(carry, layer_params, layer_cache)
+        return new_carry, new_cache
+
+    out, new_cache = jax.lax.scan(step, x, (stacked_params, cache))
+    return out, new_cache
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,145 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based einsum dispatch.
+
+TPU-native formulation (no CUDA-style scatter/gather): tokens are assigned
+expert/capacity slots with one-hot dispatch/combine tensors and the expert
+FFN is a single batched einsum over the expert dimension.  With the expert
+dim sharded over the ``model`` mesh axis (expert parallelism) GSPMD lowers
+dispatch/combine into all-to-all-style collectives; the math is identical on
+one device.
+
+Token CHUNKING: the one-hot dispatch tensor is O(T * E * C) — at the pool's
+train_4k scale (512k tokens per learner) that is terabytes.  We therefore
+route in independent chunks of ``chunk`` tokens (grouped routing, as in
+Switch/DeepSeek device-grouped capacity): capacity applies per chunk, the
+dispatch working set is O(chunk^2 * top_k * cf / 1) and the chunk loop is a
+``lax.map`` (sequential, VMEM-friendly).  With a dropless capacity factor
+(cf >= E/top_k) chunking is mathematically invisible.
+
+Supports DeepSeek-style shared experts and the switch-transformer auxiliary
+load-balance loss (surfaced so the trainer adds router_aux_coef * aux).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init
+from repro.models.mlp import mlp_apply, mlp_init
+
+DEFAULT_CHUNK = 4096
+
+
+def moe_init(key, d_model: int, expert_d_ff: int, n_experts: int,
+             n_shared: int, act: str = "silu", dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    # experts stored stacked on a leading [E, ...] dim (shardable over tp)
+    expert_keys = jax.random.split(ks[0], n_experts)
+    experts = jax.vmap(
+        lambda k: mlp_init(k, d_model, expert_d_ff, act))(expert_keys)
+    experts = jax.tree.map(lambda x: x.astype(dtype), experts)
+    p: Params = {
+        "router": dense_init(ks[1], d_model, n_experts, jnp.float32),
+        "experts": experts,
+    }
+    if n_shared:
+        p["shared"] = mlp_init(ks[2], d_model, expert_d_ff * n_shared, act,
+                               dtype)
+    return p
+
+
+def _expert_ffn(experts: Params, x_ecd: jax.Array, act: str) -> jax.Array:
+    """x [E, C, d] through per-expert FFN (stacked weights [E, ...])."""
+    if "w_gate" in experts:
+        g = jnp.einsum("ecd,edf->ecf", x_ecd, experts["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", x_ecd, experts["w_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x_ecd, experts["w_up"]))
+    return jnp.einsum("ecf,efd->ecd", h, experts["w_down"])
+
+
+def _route_chunk(p: Params, xt: jax.Array, valid: jax.Array, *,
+                 n_experts: int, top_k: int, capacity: int, act: str
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """xt [Tc, d], valid [Tc] -> (y [Tc, d], aux scalar)."""
+    n_tok = xt.shape[0]
+    logits = xt.astype(jnp.float32) @ p["router"]               # [Tc, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)           # [Tc, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    gate_vals = gate_vals * valid[:, None]
+
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)  # [Tc,k,E]
+    onehot = onehot * valid[:, None, None].astype(jnp.int32)
+    flat = onehot.reshape(n_tok * top_k, n_experts)
+    pos_in_expert = jnp.cumsum(flat, axis=0) * flat - 1            # [Tc*k, E]
+    pos = pos_in_expert.max(axis=-1).reshape(n_tok, top_k)         # [Tc, k]
+    fits = pos < capacity
+
+    pos_oh = jax.nn.one_hot(jnp.where(fits, pos, capacity), capacity + 1,
+                            dtype=xt.dtype)[..., :capacity]        # [Tc,k,C]
+    disp = jnp.einsum("tke,tkc->tec", onehot.astype(xt.dtype), pos_oh)
+    comb = jnp.einsum("tke,tkc,tk->tec", onehot.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32),
+                      gate_vals.astype(jnp.float32)).astype(xt.dtype)
+
+    x_ecd = jnp.einsum("tec,td->ecd", disp, xt)                    # [E,C,d]
+    y_ecd = _expert_ffn(p["experts"], x_ecd, act)
+    yt = jnp.einsum("tec,ecd->td", comb, y_ecd)
+
+    # switch-style load-balance aux loss over valid tokens
+    denom = jnp.maximum(valid.sum(), 1.0)
+    me = (probs * valid[:, None]).sum(axis=0) / denom              # [E]
+    ce = onehot.sum(axis=1).astype(jnp.float32).sum(axis=0) / denom
+    aux = n_experts * jnp.sum(me * ce) / top_k
+    return yt, aux
+
+
+def moe_apply(p: Params, x: jax.Array, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, act: str = "silu",
+              chunk: int = DEFAULT_CHUNK) -> Tuple[jax.Array, jax.Array]:
+    """x [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    Chunking is along the SEQUENCE axis only (the batch axis stays a vmap
+    dim, so its data-parallel sharding is preserved; the seq-chunk loop axis
+    is unsharded and safe to ``lax.map`` over).  Routing group = one
+    (sequence row x seq chunk); capacity applies per group.
+    """
+    b, s, d = x.shape
+    tc = min(chunk, s)
+    n_chunks = -(-s // tc)
+    pad = n_chunks * tc - s
+    valid = jnp.concatenate([jnp.ones((s,), jnp.float32),
+                             jnp.zeros((pad,), jnp.float32)])
+    xt = x
+    if pad:
+        xt = jnp.concatenate([x, jnp.zeros((b, pad, d), x.dtype)], axis=1)
+
+    capacity = max(1, int(math.ceil(tc * top_k / n_experts
+                                    * capacity_factor)))
+
+    route = functools.partial(_route_chunk, p, n_experts=n_experts,
+                              top_k=top_k, capacity=capacity, act=act)
+    vroute = jax.vmap(route, in_axes=(0, None))      # over batch rows
+
+    # [B, nc, tc, d] -> map over nc (axis 0 after moveaxis)
+    xc = jnp.moveaxis(xt.reshape(b, n_chunks, tc, d), 1, 0)
+    vc = valid.reshape(n_chunks, tc)
+    if n_chunks == 1:
+        yt, aux = vroute(xc[0], vc[0])
+        yt = yt[None]
+        aux = aux.mean()
+    else:
+        yt, aux = jax.lax.map(lambda args: vroute(*args), (xc, vc))
+        aux = aux.mean()
+
+    yt = jnp.moveaxis(yt, 0, 1).reshape(b, n_chunks * tc, d)[:, :s]
+    out = yt
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, act)
+    return out, jnp.asarray(aux, jnp.float32)

@@ -1,0 +1,124 @@
+"""Compact JAX ResNet + MLP classifiers — the paper's own model family,
+used by the paper-validation benchmarks (K2 / K1 / S sweeps, vs-K-AVG).
+
+Pure functional; narrow widths so CPU simulation of P in {8..64} learners is
+fast.  Matches the paper's setup shape: CIFAR-like 32x32 inputs, softmax CE,
+SGD with step-decayed learning rate.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet18_cifar import CNNConfig, MLPConfig
+from repro.models.common import (Params, dense_init, softmax_cross_entropy)
+
+
+def _conv_init(key, k: int, cin: int, cout: int, dtype=jnp.float32):
+    fan_in = k * k * cin
+    return (jax.random.normal(key, (k, k, cin, cout), jnp.float32)
+            * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def _conv(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn_init(c: int, dtype=jnp.float32):
+    # group-norm (batch-independent; correct under per-learner vmap)
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _gn(p, x, groups: int = 8, eps: float = 1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    x = xg.reshape(n, h, w, c)
+    return (x * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _block_init(key, cin: int, cout: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(ks[0], 3, cin, cout, dtype),
+        "gn1": _gn_init(cout, dtype),
+        "conv2": _conv_init(ks[1], 3, cout, cout, dtype),
+        "gn2": _gn_init(cout, dtype),
+    }
+    if cin != cout:
+        p["proj"] = _conv_init(ks[2], 1, cin, cout, dtype)
+    return p
+
+
+def _block_apply(p: Params, x, stride: int):
+    h = jax.nn.relu(_gn(p["gn1"], _conv(x, p["conv1"], stride)))
+    h = _gn(p["gn2"], _conv(h, p["conv2"]))
+    sc = x if "proj" not in p else _conv(x, p["proj"], stride)
+    return jax.nn.relu(h + sc)
+
+
+def resnet_init(key, cfg: CNNConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2 + sum(cfg.depth_blocks))
+    w = cfg.width
+    p: Params = {"stem": _conv_init(ks[0], 3, cfg.channels, w, dtype),
+                 "gn0": _gn_init(w, dtype), "blocks": []}
+    blocks = []
+    cin = w
+    i = 1
+    for stage, n in enumerate(cfg.depth_blocks):
+        cout = w * (2 ** stage)
+        for b in range(n):
+            blocks.append(_block_init(ks[i], cin, cout, dtype))
+            cin = cout
+            i += 1
+    p["blocks"] = blocks
+    p["head"] = dense_init(ks[i], cin, cfg.n_classes, dtype)
+    return p
+
+
+def resnet_apply(p: Params, x: jax.Array, cfg: CNNConfig) -> jax.Array:
+    h = jax.nn.relu(_gn(p["gn0"], _conv(x, p["stem"])))
+    i = 0
+    for stage, n in enumerate(cfg.depth_blocks):
+        for b in range(n):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            h = _block_apply(p["blocks"][i], h, stride)
+            i += 1
+    h = h.mean(axis=(1, 2))
+    return h @ p["head"]
+
+
+def resnet_loss(p: Params, batch: Dict[str, jax.Array], cfg: CNNConfig):
+    logits = resnet_apply(p, batch["x"], cfg)
+    return softmax_cross_entropy(logits, batch["y"])
+
+
+# ---------------------------------------------------------------------- #
+
+def mlp_cls_init(key, cfg: MLPConfig, dtype=jnp.float32) -> Params:
+    dims = (cfg.in_dim,) + cfg.hidden + (cfg.n_classes,)
+    ks = jax.random.split(key, len(dims) - 1)
+    return {"w": [dense_init(k, a, b, dtype)
+                  for k, a, b in zip(ks, dims[:-1], dims[1:])],
+            "b": [jnp.zeros((b,), dtype) for b in dims[1:]]}
+
+
+def mlp_cls_apply(p: Params, x: jax.Array) -> jax.Array:
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < len(p["w"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_cls_loss(p: Params, batch: Dict[str, jax.Array]):
+    return softmax_cross_entropy(mlp_cls_apply(p, batch["x"]), batch["y"])

@@ -1,0 +1,212 @@
+"""RWKV-6 "Finch" blocks: time-mix with data-dependent decay + channel-mix.
+
+The WKV6 recurrence per head (head size Dh, state S in R^{Dh x Dh}):
+
+    y_t[i]   = sum_j r_t[j] * ( S_t[j,i] + u[j] * k_t[j] * v_t[i] )
+    S_{t+1}  = diag(w_t) S_t + k_t^T v_t          (w_t = data-dependent decay)
+
+Training/prefill run the recurrence through ``kernels.ops.rwkv6_wkv`` (Pallas
+chunked kernel on TPU; pure-jnp oracle elsewhere).  Decode carries the
+[B, H, Dh, Dh] state — O(1) per token, which is why long_500k is native.
+
+Token-shift mixing uses the paper's ddlerp (dynamic low-rank interpolation
+between the current and previous token).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Params, dense_init, layernorm,
+                                 layernorm_init, rmsnorm, rmsnorm_init)
+
+LORA_DIM = 32
+DECAY_LORA_DIM = 64
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def timemix_init(key, d_model: int, n_heads: int, head_dim: int,
+                 dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 12)
+    d_attn = n_heads * head_dim
+    p: Params = {
+        # static token-shift interpolants
+        "mu_x": jnp.full((d_model,), 0.5, dtype),
+        "mu": jnp.full((5, d_model), 0.5, dtype),
+        # ddlerp low-rank (shared A, per-target B)
+        "mix_A": dense_init(ks[0], d_model, 5 * LORA_DIM, dtype, scale=1e-2),
+        "mix_B": dense_init(ks[1], LORA_DIM, 5 * d_model, dtype, scale=1e-2),
+        # projections
+        "wr": dense_init(ks[2], d_model, d_attn, dtype),
+        "wk": dense_init(ks[3], d_model, d_attn, dtype),
+        "wv": dense_init(ks[4], d_model, d_attn, dtype),
+        "wg": dense_init(ks[5], d_model, d_attn, dtype),
+        "wo": dense_init(ks[6], d_attn, d_model, dtype),
+        # data-dependent decay
+        "decay_base": jnp.linspace(-6.0, -1.0, d_attn).astype(dtype),
+        "decay_A": dense_init(ks[7], d_model, DECAY_LORA_DIM, dtype, scale=1e-2),
+        "decay_B": dense_init(ks[8], DECAY_LORA_DIM, d_attn, dtype, scale=1e-2),
+        # per-channel bonus ("time_faaaa")
+        "u": (0.1 * jax.random.normal(ks[9], (d_attn,))).astype(dtype),
+        "ln_out": layernorm_init(d_attn, dtype),  # group-norm over heads
+    }
+    return p
+
+
+def _ddlerp(p: Params, x: jax.Array, x_prev: jax.Array):
+    """Returns the 5 mixed inputs (w, k, v, r, g), each [B,S,d]."""
+    dx = x_prev - x
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(xxx @ p["mix_A"])
+    b, s, _ = x.shape
+    lora = lora.reshape(b, s, 5, LORA_DIM)
+    mix_b = p["mix_B"].reshape(LORA_DIM, 5, -1)
+    dyn = jnp.einsum("bsfl,lfd->bsfd", lora, mix_b)   # [B,S,5,d]
+    mixes = p["mu"].astype(x.dtype)[None, None] + dyn
+    outs = [x + dx * mixes[:, :, i] for i in range(5)]
+    return outs  # order matches MIX_NAMES
+
+
+def _shift(x: jax.Array, prev: jax.Array = None) -> jax.Array:
+    """Previous-token sequence shift. prev [B,d] fills position 0."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def timemix_apply(p: Params, x: jax.Array, *, n_heads: int, head_dim: int,
+                  eps: float, shift_state=None, wkv_state=None,
+                  impl: str = "xla"
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence time-mix.
+
+    Returns (out [B,S,d], new_shift_state [B,d], new_wkv_state [B,H,Dh,Dh]).
+    """
+    b, s, d = x.shape
+    xs = _shift(x, shift_state)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xs)
+    r = (xr @ p["wr"]).reshape(b, s, n_heads, head_dim)
+    k = (xk @ p["wk"]).reshape(b, s, n_heads, head_dim)
+    v = (xv @ p["wv"]).reshape(b, s, n_heads, head_dim)
+    g = jax.nn.silu(xg @ p["wg"])
+    # decay in (0,1): w = exp(-exp(base + lora))
+    dec = p["decay_base"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, s, n_heads, head_dim)
+    u = p["u"].astype(jnp.float32).reshape(n_heads, head_dim)
+
+    from repro.kernels import ops as kops
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, n_heads, head_dim, head_dim), jnp.float32)
+    y, new_state = kops.rwkv6_wkv(r, k, v, w, u, wkv_state, impl=impl)
+
+    y = layernorm(p["ln_out"], y.reshape(b, s, n_heads * head_dim), eps)
+    out = (y * g) @ p["wo"]
+    return out, x[:, -1].astype(jnp.float32), new_state
+
+
+def timemix_decode(p: Params, x, state: Dict[str, Any], *, n_heads: int,
+                   head_dim: int, eps: float):
+    """Single-token step. x [B,1,d]; state {shift [B,d], wkv [B,H,Dh,Dh]}."""
+    b = x.shape[0]
+    xs = state["shift"][:, None].astype(x.dtype)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xs)
+    r = (xr @ p["wr"]).reshape(b, n_heads, head_dim).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, n_heads, head_dim).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, n_heads, head_dim).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    dec = p["decay_base"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, n_heads, head_dim)
+    u = p["u"].astype(jnp.float32).reshape(n_heads, head_dim)
+
+    S = state["wkv"]                                   # [B,H,Dh,Dh]
+    kv = k[..., :, None] * v[..., None, :]             # [B,H,Dh,Dh]
+    y = jnp.einsum("bhj,bhji->bhi", r, S + u[None, :, :, None] * kv)
+    new_S = w[..., :, None] * S + kv
+    y = layernorm(p["ln_out"], y.reshape(b, 1, n_heads * head_dim)
+                  .astype(x.dtype), eps)
+    out = (y * g) @ p["wo"]
+    return out, {"shift": x[:, 0].astype(jnp.float32), "wkv": new_S}
+
+
+# --------------------------------------------------------------------- #
+# channel mix
+# --------------------------------------------------------------------- #
+
+def channelmix_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "wk": dense_init(ks[0], d_model, d_ff, dtype),
+        "wv": dense_init(ks[1], d_ff, d_model, dtype),
+        "wr": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def channelmix_apply(p: Params, x, shift_state=None):
+    xs = _shift(x, shift_state)
+    dx = xs - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, x[:, -1].astype(jnp.float32)
+
+
+def channelmix_decode(p: Params, x, shift_state):
+    xs = shift_state[:, None].astype(x.dtype)
+    dx = xs - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, x[:, 0].astype(jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# full block
+# --------------------------------------------------------------------- #
+
+def block_init(key, d_model: int, d_ff: int, n_heads: int, head_dim: int,
+               dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": rmsnorm_init(d_model, dtype),
+        "tm": timemix_init(ks[0], d_model, n_heads, head_dim, dtype),
+        "ln2": rmsnorm_init(d_model, dtype),
+        "cm": channelmix_init(ks[1], d_model, d_ff, dtype),
+    }
+
+
+def block_apply(p: Params, x, *, n_heads, head_dim, eps, impl="xla"):
+    h, _, _ = timemix_apply(p["tm"], rmsnorm(p["ln1"], x, eps),
+                            n_heads=n_heads, head_dim=head_dim, eps=eps,
+                            impl=impl)
+    x = x + h
+    h, _ = channelmix_apply(p["cm"], rmsnorm(p["ln2"], x, eps))
+    return x + h
+
+
+def block_decode(p: Params, x, state, *, n_heads, head_dim, eps):
+    h, tm_state = timemix_decode(
+        p["tm"], rmsnorm(p["ln1"], x, eps),
+        {"shift": state["tm_shift"], "wkv": state["wkv"]},
+        n_heads=n_heads, head_dim=head_dim, eps=eps)
+    x = x + h
+    h, cm_shift = channelmix_decode(p["cm"], rmsnorm(p["ln2"], x, eps),
+                                    state["cm_shift"])
+    new_state = {"tm_shift": tm_state["shift"], "wkv": tm_state["wkv"],
+                 "cm_shift": cm_shift}
+    return x + h, new_state
+
+
+def init_block_state(batch: int, d_model: int, n_heads: int, head_dim: int
+                     ) -> Dict[str, jax.Array]:
+    return {
+        "tm_shift": jnp.zeros((batch, d_model), jnp.float32),
+        "wkv": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d_model), jnp.float32),
+    }

@@ -1,0 +1,106 @@
+"""Modality-frontend STUBS (the one allowed carve-out).
+
+The assignment specifies that for [audio] and [vlm] architectures only the
+transformer backbone is implemented; the conv/mel codec and the ViT encoder
+are replaced by precomputed embeddings of the right shape.  These helpers
+produce those embeddings (random but deterministic) and the corresponding
+``ShapeDtypeStruct`` specs used by the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def vision_patch_embeds(key, batch: int, n_patches: int, d_model: int,
+                        dtype=jnp.float32) -> jax.Array:
+    """Stub ViT output: [B, n_patches, d_model]."""
+    return 0.02 * jax.random.normal(key, (batch, n_patches, d_model), dtype)
+
+
+def mrope_positions(batch: int, n_patches: int, text_len: int,
+                    grid: Tuple[int, int, int] = None) -> jax.Array:
+    """Qwen2-VL position ids [B, n_patches + text_len, 3] (t, h, w).
+
+    Vision tokens get grid coordinates; text tokens continue sequentially
+    from max(vision position) + 1 with t == h == w.
+    """
+    if grid is None:
+        side = int(round(n_patches ** 0.5))
+        while n_patches % side:
+            side -= 1
+        grid = (1, side, n_patches // side)
+    t, h, w = grid
+    assert t * h * w == n_patches, (grid, n_patches)
+    tt, hh, ww = jnp.meshgrid(jnp.arange(t), jnp.arange(h), jnp.arange(w),
+                              indexing="ij")
+    vis = jnp.stack([tt.ravel(), hh.ravel(), ww.ravel()], axis=-1)
+    start = int(max(grid))
+    txt = start + jnp.arange(text_len)
+    txt = jnp.stack([txt, txt, txt], axis=-1)
+    pos = jnp.concatenate([vis, txt], axis=0).astype(jnp.int32)
+    return jnp.broadcast_to(pos[None], (batch, n_patches + text_len, 3))
+
+
+def audio_frame_embeds(key, batch: int, n_frames: int, d_model: int,
+                       dtype=jnp.float32) -> jax.Array:
+    """Stub speech-frontend output: [B, n_frames, d_model]."""
+    return 0.02 * jax.random.normal(key, (batch, n_frames, d_model), dtype)
+
+
+def make_train_batch(key, cfg: ArchConfig, batch: int, seq_len: int,
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """A runnable synthetic batch honoring the family's input contract."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "vlm":
+        nv = min(cfg.frontend_tokens, max(1, seq_len // 4))
+        st = seq_len - nv
+        return {
+            "tokens": jax.random.randint(k1, (batch, st), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k2, (batch, st), 0, cfg.vocab_size),
+            "vision_embeds": vision_patch_embeds(k3, batch, nv, cfg.d_model,
+                                                 dtype),
+            "positions": mrope_positions(batch, nv, st),
+        }
+    if cfg.family == "audio":
+        tf = min(cfg.frontend_tokens, max(4, seq_len // 4))
+        return {
+            "frames": audio_frame_embeds(k3, batch, tf, cfg.d_model, dtype),
+            "tokens": jax.random.randint(k1, (batch, seq_len), 0,
+                                         cfg.vocab_size),
+            "labels": jax.random.randint(k2, (batch, seq_len), 0,
+                                         cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab_size),
+    }
+
+
+def train_batch_specs(cfg: ArchConfig, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    S = jax.ShapeDtypeStruct
+    if cfg.family == "vlm":
+        nv = cfg.frontend_tokens
+        st = seq_len - nv
+        return {
+            "tokens": S((batch, st), jnp.int32),
+            "labels": S((batch, st), jnp.int32),
+            "vision_embeds": S((batch, nv, cfg.d_model), dtype),
+            "positions": S((batch, seq_len, 3), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "frames": S((batch, cfg.frontend_tokens, cfg.d_model), dtype),
+            "tokens": S((batch, seq_len), jnp.int32),
+            "labels": S((batch, seq_len), jnp.int32),
+        }
+    return {
+        "tokens": S((batch, seq_len), jnp.int32),
+        "labels": S((batch, seq_len), jnp.int32),
+    }

@@ -1,0 +1,90 @@
+"""Minimal functional optimizers (no optax on this container).
+
+An :class:`Optimizer` is a pair of pure functions; state pytrees mirror the
+param pytree, so they stack/shard transparently under the Hier-AVG
+stacked-learner layout (each learner gets its own optimizer state slice).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, params, opt_state, step) -> (new_params, new_opt_state)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    """Plain / momentum SGD — the paper's optimizer (lr 0.1 -> 0.01 step decay)."""
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, params, state, step):
+        g = _lr_at(lr, step)
+
+        def upd(p, gr, m=None):
+            gr = gr.astype(jnp.float32)
+            if weight_decay:
+                gr = gr + weight_decay * p.astype(jnp.float32)
+            if momentum == 0.0:
+                return (p.astype(jnp.float32) - g * gr).astype(p.dtype), None
+            m_new = momentum * m + gr
+            d = gr + momentum * m_new if nesterov else m_new
+            return (p.astype(jnp.float32) - g * d).astype(p.dtype), \
+                m_new.astype(m.dtype)
+
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, gr: upd(p, gr)[0], params,
+                                      grads)
+            return new_params, ()
+        out = jax.tree.map(upd, params, grads, state)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda o: o[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": z, "nu": jax.tree.map(jnp.zeros_like, z)}
+
+    def update(grads, params, state, step):
+        g = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, gr, mu, nu):
+            gr = gr.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * gr
+            nu = b2 * nu + (1 - b2) * jnp.square(gr)
+            d = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - g * d).astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        is3 = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda o: o[0], out, is_leaf=is3),
+                {"mu": jax.tree.map(lambda o: o[1], out, is_leaf=is3),
+                 "nu": jax.tree.map(lambda o: o[2], out, is_leaf=is3)})
+
+    return Optimizer(init, update)

@@ -1,0 +1,62 @@
+"""Learning-rate schedules.
+
+The paper's CIFAR recipe: constant 0.1 for 150 epochs, then 0.01
+(``step_decay_lr``).  Theorem 3.1's rate-optimal constant step is
+``gamma = sqrt(P*B/T)`` (``thm31_lr``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+    return f
+
+
+def step_decay_lr(base: float, boundaries: Sequence[int],
+                  decays: Sequence[float]):
+    """Paper-style piecewise-constant decay (e.g. 0.1 -> 0.01 at epoch 150)."""
+    bs = tuple(boundaries)
+    ds = tuple(decays)
+    assert len(bs) == len(ds)
+
+    def f(step):
+        lr = jnp.asarray(base, jnp.float32)
+        for b, d in zip(bs, ds):
+            lr = jnp.where(step >= b, base * d, lr)
+        return lr
+    return f
+
+
+def cosine_lr(base: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / max(1, total_steps), 0.0, 1.0)
+        c = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(base * (final_frac + (1 - final_frac) * c),
+                           jnp.float32)
+    return f
+
+
+def warmup_cosine_lr(base: float, warmup: int, total_steps: int,
+                     final_frac: float = 0.1):
+    cos = cosine_lr(base, max(1, total_steps - warmup), final_frac)
+
+    def f(step):
+        w = jnp.minimum(step / max(1, warmup), 1.0)
+        return w * cos(jnp.maximum(step - warmup, 0))
+    return f
+
+
+def thm31_lr(P: int, B: int, T: int) -> float:
+    """Theorem 3.1 rate-optimal constant step size: sqrt(P*B/T)."""
+    return math.sqrt(P * B / T)
+
+
+def thm31_k2(P: int, B: int, T: int) -> int:
+    """Theorem 3.1 admissible global-averaging interval T^1/4 / (PB)^3/4."""
+    return max(1, int(round(T ** 0.25 / (P * B) ** 0.75)))

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (PartitionRules,  # noqa: F401
+                                     batch_pspec, make_constraint_fn,
+                                     param_pspecs, safe_pspec)

@@ -1,0 +1,193 @@
+"""Partition-rule engine: param-path regex -> PartitionSpec.
+
+Megatron-style tensor layout on the ``model`` (TP) axis with ZeRO-style
+sharding on the ``fsdp`` axis *inside* one learner:
+
+  input-side weights  [d_in, d_out_parallel]  ->  (fsdp, model)
+  output-side weights [d_in_parallel, d_out]  ->  (model, fsdp)
+  embeddings          [V, d]                  ->  (None, model)
+  MoE expert stacks   [E, ...]                ->  (model, fsdp, ...) expert par.
+  norms / vectors                             ->  replicated
+
+Leading *extra* dims of every leaf (stacked learner axes [pods, G, S] from
+the Hier-AVG layout, and/or the stacked layer dim) are inferred from rank:
+trainer-state leaves get ("pod","group","local") on their first three dims,
+remaining extras None.
+
+``safe_pspec`` drops any axis whose mesh size does not divide the array dim
+(e.g. hymba's 25 attention heads vs TP-16, seamless' 256206 vocab), keeping
+every config lowerable without special cases.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ordered (regex, inner spec relative to the *logical* trailing dims)
+# first match wins; matched against "/"-joined param path.
+DEFAULT_RULES: List[Tuple[str, Tuple]] = [
+    # --- MoE expert stacks (leading E dim) ---
+    (r"ffn/experts/w_(gate|up)$", ("model", "fsdp", None)),
+    (r"ffn/experts/w_down$", ("model", None, "fsdp")),
+    (r"ffn/router$", (None, None)),
+    # --- rwkv channel-mix (names collide with attention; match parent) ---
+    (r"cm/wk$", ("fsdp", "model")),
+    (r"cm/wv$", ("model", "fsdp")),
+    (r"cm/wr$", ("fsdp", "model")),
+    (r"cm/mu_[kr]$", (None,)),
+    # --- rwkv time-mix ---
+    (r"tm/mu_x$", (None,)),
+    (r"tm/mu$", (None, None)),
+    (r"tm/mix_A$", ("fsdp", None)),
+    (r"tm/mix_B$", (None, "model")),
+    (r"tm/decay_(base|A|B)$", None),   # resolved below by rank
+    (r"tm/u$", (None,)),
+    # --- mamba ---
+    (r"ssm/in_proj$", ("fsdp", "model")),
+    (r"ssm/conv_[wb]$", None),
+    (r"ssm/x_proj$", ("model", None)),
+    (r"ssm/dt_proj$", (None, "model")),
+    (r"ssm/dt_bias$", ("model",)),
+    (r"ssm/A_log$", ("model", None)),
+    (r"ssm/D$", ("model",)),
+    (r"ssm/out_proj$", ("model", "fsdp")),
+    # --- attention (GQA + MLA) ---
+    (r"(attn|self_attn|cross_attn)/w[qkv]$", ("fsdp", "model")),
+    (r"(attn|self_attn|cross_attn)/wo$", ("model", "fsdp")),
+    (r"attn/w_dkv$", ("fsdp", None)),
+    (r"attn/w_kr$", ("fsdp", None)),
+    (r"attn/w_u[kv]$", (None, "model")),
+    (r"attn/kv_norm/.*$", (None,)),
+    # --- rwkv top-level projections (wr/wk/wv/wg under tm) ---
+    (r"tm/w[rkvg]$", ("fsdp", "model")),
+    (r"tm/wo$", ("model", "fsdp")),
+    # --- mlp ---
+    (r"(mlp|ffn|ffn/shared)/w_(gate|up)$", ("fsdp", "model")),
+    (r"(mlp|ffn|ffn/shared)/w_down$", ("model", "fsdp")),
+    # --- embeddings / heads ---
+    # vocab-sharded: token gather goes collective, but (tied) unembed logits
+    # come out vocab-sharded — O(V) logits tensors never replicate over TP
+    (r"embed$", ("model", None)),
+    (r"lm_head$", ("fsdp", "model")),
+    (r"head$", ("fsdp", None)),
+    # --- norms and leftovers: replicate (resolved by rank) ---
+]
+
+
+class PartitionRules:
+    """Resolve PartitionSpecs for a params pytree.
+
+    axis_map renames the logical axes ("pod","group","local","fsdp","model")
+    to the actual mesh axes (serving meshes use ("data","model") only).
+    """
+
+    def __init__(self, rules: Optional[List[Tuple[str, Tuple]]] = None,
+                 *, learner_axes: Sequence[Optional[str]] =
+                 ("pod", "group", "local"),
+                 axis_map: Optional[Dict[str, Optional[str]]] = None):
+        self.rules = [(re.compile(pat), spec)
+                      for pat, spec in (rules or DEFAULT_RULES)]
+        self.learner_axes = tuple(learner_axes)
+        self.axis_map = axis_map or {}
+
+    def _rename(self, ax):
+        if ax is None:
+            return None
+        return self.axis_map.get(ax, ax)
+
+    def inner_spec(self, path: str, rank: int) -> Tuple:
+        for pat, spec in self.rules:
+            if pat.search(path):
+                if spec is not None and len(spec) <= rank:
+                    return spec
+                break
+        # fallback by rank: replicate vectors; 2-D -> (fsdp, model)
+        if rank >= 2:
+            return ("fsdp", "model") + (None,) * (rank - 2)
+        return (None,) * rank
+
+    def spec_for(self, path: str, shape: Tuple[int, ...],
+                 *, stacked_learners: bool) -> P:
+        rank = len(shape)
+        lead = len(self.learner_axes) if stacked_learners else 0
+        # try decreasing inner rank until it fits (extra dims: layer stacks)
+        for inner_rank in range(min(rank - lead, rank), -1, -1):
+            inner = self.inner_spec(path, inner_rank)
+            if len(inner) == inner_rank:
+                break
+        extras = rank - lead - len(inner)
+        if extras < 0:           # tiny leaf, fewer dims than learner axes
+            lead, extras, inner = 0, 0, (None,) * rank
+        axes = (tuple(self.learner_axes[:lead]) + (None,) * extras
+                + tuple(inner))
+        axes = tuple(self._rename(a) for a in axes)
+        return P(*axes)
+
+
+def safe_pspec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axis names whose mesh size does not divide the array dim."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_pspecs(params, mesh: Mesh, *, stacked_learners: bool,
+                 rules: Optional[PartitionRules] = None):
+    """Pytree of PartitionSpecs matching ``params`` (divisibility-safe)."""
+    rules = rules or PartitionRules()
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    specs = {}
+    out = jax.tree_util.tree_map_with_path(
+        lambda kp, x: safe_pspec(
+            rules.spec_for(_path_str(kp), x.shape,
+                           stacked_learners=stacked_learners),
+            x.shape, mesh),
+        params)
+    return out
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def batch_pspec(ndim_after_learner: int, *, round_dims: int = 2,
+                stacked_learners: bool = True,
+                batch_axis: Optional[str] = "fsdp",
+                axis_map: Optional[Dict[str, Optional[str]]] = None) -> P:
+    """Spec for round batches [beta, K1, pods, G, S, B, ...trailing]."""
+    axis_map = axis_map or {}
+    ren = lambda a: axis_map.get(a, a) if a else None
+    lead = (None,) * round_dims
+    learner = (ren("pod"), ren("group"), ren("local")) if stacked_learners \
+        else ()
+    tail = (ren(batch_axis),) + (None,) * (ndim_after_learner - 1)
+    return P(*(lead + learner + tail))
+
+
+def make_constraint_fn(mesh: Mesh, specs):
+    """constraint_fn for core.hier_avg: re-pin shardings after averaging."""
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+    def constrain(tree):
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            shardings)
+    return constrain

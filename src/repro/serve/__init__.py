@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, GenerationConfig  # noqa: F401
+from repro.serve.kvcache import cache_bytes, describe_cache  # noqa: F401

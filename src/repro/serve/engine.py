@@ -1,0 +1,122 @@
+"""Batched serving engine: prefill + jitted decode loop + slot-based
+continuous batching (lite).
+
+The decode loop is a single jitted ``lax.scan`` over ``max_new_tokens``
+steps, so the whole generation of a batch is two XLA programs (prefill,
+scan-decode) regardless of length.  The request loop keeps a fixed number of
+batch slots and refills finished slots from the queue — the standard
+production pattern, minus preemption.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import ModelBundle
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 => greedy
+    eos_id: int = -1                # -1 => never stop early
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    request_id: int
+    prompt: np.ndarray
+    tokens: np.ndarray              # generated tokens (trimmed at EOS)
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, bundle: ModelBundle, params, *,
+                 max_len: int = 1024,
+                 gen: GenerationConfig = GenerationConfig()):
+        self.bundle = bundle
+        self.params = params
+        self.max_len = max_len
+        self.gen = gen
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode_scan = jax.jit(self._decode_scan_impl,
+                                    static_argnames=("steps",))
+
+    # ------------------------------------------------------------ #
+
+    def _prefill_impl(self, params, batch):
+        # max_len is a static python int (cache allocation size), not traced
+        return self.bundle.prefill(params,
+                                   dict(batch, max_len=self.max_len))
+
+    def _sample(self, logits, key):
+        if self.gen.temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.gen.temperature).astype(jnp.int32)
+
+    def _decode_scan_impl(self, params, first_tok, cache, key, *, steps: int):
+        def step(carry, k):
+            tok, cache = carry
+            logits, cache = self.bundle.decode_step(params, tok, cache)
+            nxt = self._sample(logits, k)
+            return (nxt, cache), nxt
+
+        keys = jax.random.split(key, steps)
+        (last, cache), toks = jax.lax.scan(step, (first_tok, cache), keys)
+        return toks.T, cache          # [B, steps]
+
+    # ------------------------------------------------------------ #
+
+    def generate(self, prompts: jax.Array,
+                 extras: Optional[Dict[str, Any]] = None) -> np.ndarray:
+        """prompts [B, S] int32 -> generated tokens [B, max_new_tokens]."""
+        batch = {"tokens": prompts}
+        if extras:
+            batch.update(extras)
+        logits, cache = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(self.gen.seed)
+        k0, key = jax.random.split(key)
+        first = self._sample(logits, k0)
+        out = [np.asarray(first)[:, None]]
+        if self.gen.max_new_tokens > 1:
+            toks, cache = self._decode_scan(self.params, first, cache, key,
+                                            steps=self.gen.max_new_tokens - 1)
+            out.append(np.asarray(toks))
+        return np.concatenate(out, axis=1)
+
+    # ------------------------------------------------------------ #
+
+    def serve_queue(self, requests: Sequence[np.ndarray], *,
+                    slots: int = 4) -> List[RequestResult]:
+        """Slot-based batched serving of a request queue.
+
+        Requests (token arrays, same length per wave) are grouped into waves
+        of ``slots``; each wave shares prefill + decode programs (recompiled
+        only when the prompt length changes).
+        """
+        results: List[RequestResult] = []
+        queue = list(enumerate(requests))
+        eos = self.gen.eos_id
+        while queue:
+            wave = queue[:slots]
+            queue = queue[slots:]
+            ids = [i for i, _ in wave]
+            lens = {len(p) for _, p in wave}
+            # pad the wave to a single prompt length (left-pad with 0)
+            L = max(lens)
+            prompts = np.zeros((len(wave), L), np.int32)
+            for r, (_, p) in enumerate(wave):
+                prompts[r, L - len(p):] = p
+            toks = self.generate(jnp.asarray(prompts))
+            for r, rid in enumerate(ids):
+                t = toks[r]
+                if eos >= 0 and (t == eos).any():
+                    t = t[: int(np.argmax(t == eos)) + 1]
+                results.append(RequestResult(rid, prompts[r], t, len(t)))
+        return results

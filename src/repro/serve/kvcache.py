@@ -1,0 +1,50 @@
+"""KV-cache accounting helpers.
+
+Cache construction itself lives with each model family
+(ModelBundle.init_cache): full GQA cache, rolling sliding-window buffer,
+compressed MLA latents, RWKV/Mamba constant-size states.  These helpers
+size them for serving/dry-run planning.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, max_len: int,
+                *, rolling: bool = False, cache_dtype=jnp.bfloat16) -> int:
+    """Analytic per-replica cache size in bytes."""
+    esize = jnp.dtype(cache_dtype).itemsize
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        hd = cfg.resolved_head_dim
+        per = cfg.ssm_heads * hd * hd * 4 + 2 * cfg.d_model * 4
+        return batch * L * per
+    if cfg.family == "hybrid":
+        w = cfg.sliding_window
+        kv = 2 * w * cfg.n_kv_heads * cfg.resolved_head_dim * esize
+        di = cfg.d_model * cfg.ssm_expand
+        ssm = di * cfg.ssm_state * 4 + 3 * di * 4
+        return batch * L * (kv + ssm)
+    if cfg.kv_lora_rank:
+        per = max_len * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * esize
+        return batch * L * per
+    length = cfg.long_context_window if rolling else max_len
+    per = 2 * length * cfg.n_kv_heads * cfg.resolved_head_dim * esize
+    n_layers = L + (cfg.n_layers if cfg.is_encoder_decoder else 0)
+    return batch * L * per
+
+
+def describe_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   *, rolling: bool = False) -> Dict[str, Any]:
+    b = cache_bytes(cfg, batch, max_len, rolling=rolling)
+    kind = ("ssm-state" if cfg.family == "ssm"
+            else "hybrid(window+state)" if cfg.family == "hybrid"
+            else "mla-latent" if cfg.kv_lora_rank
+            else "rolling-window" if rolling else "full-kv")
+    return {"kind": kind, "bytes": b, "gib": b / 2 ** 30,
+            "bytes_per_seq": b // max(batch, 1)}

@@ -1,0 +1,28 @@
+import os
+import sys
+
+# src/ layout without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.resnet18_cifar import MLPConfig  # noqa: E402
+from repro.data.synthetic import make_classification_task  # noqa: E402
+from repro.models.resnet import mlp_cls_init, mlp_cls_loss  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def cls_task():
+    """A small learnable classification task + model (shared by core tests)."""
+    cfg = MLPConfig(in_dim=16, hidden=(32,), n_classes=4)
+    sample = make_classification_task(16, 4, seed=11, noise=0.5)
+    loss_fn = lambda p, b: mlp_cls_loss(p, b)  # noqa: E731
+    init_fn = lambda k: mlp_cls_init(k, cfg)   # noqa: E731
+    eval_batch = sample(jax.random.PRNGKey(123), 256)
+    return {"loss_fn": loss_fn, "init_fn": init_fn, "sample": sample,
+            "eval_batch": eval_batch, "cfg": cfg}

@@ -1,0 +1,202 @@
+"""Hier-AVG algorithm semantics: the paper's special-case equivalences and
+reduction invariants, on a real learnable task (fixture ``cls_task``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HierAvgParams
+from repro.core import (HierTopology, Simulator, global_average, init_state,
+                        local_average, make_hier_round, make_hier_step,
+                        make_kavg_round, make_sync_sgd_round, stack_like,
+                        unstack_first)
+from repro.core.hier_avg import make_sgd_step
+from repro.optim import sgd
+
+
+def _leaves_equal_across_learners(params, topo):
+    for leaf in jax.tree.leaves(params):
+        flat = leaf.reshape((topo.n_learners,) + leaf.shape[3:])
+        if not bool(jnp.allclose(flat, flat[0:1], atol=1e-6)):
+            return False
+    return True
+
+
+def test_k1_eq_k2_equals_kavg(cls_task):
+    """Hier-AVG with K1 == K2 reproduces K-AVG exactly (same data)."""
+    topo = HierTopology(1, 2, 4)
+    h = HierAvgParams(k1=6, k2=6)
+    kw = dict(topo=topo, hier=h, optimizer=sgd(0.05), seed=5,
+              eval_batch=cls_task["eval_batch"], per_learner_batch=8)
+    r1 = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                   cls_task["sample"], algo="hier", **kw).run(3)
+    r2 = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                   cls_task["sample"], algo="kavg", **kw).run(3)
+    np.testing.assert_allclose(r1.eval_losses, r2.eval_losses, rtol=1e-5)
+
+
+def test_s1_local_averaging_is_identity(cls_task):
+    """S == 1: local reductions are no-ops, so hier == kavg."""
+    topo = HierTopology(1, 8, 1)
+    h = HierAvgParams(k1=2, k2=6)
+    kw = dict(topo=topo, hier=h, optimizer=sgd(0.05), seed=6,
+              eval_batch=cls_task["eval_batch"], per_learner_batch=8)
+    r1 = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                   cls_task["sample"], algo="hier", **kw).run(3)
+    r2 = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                   cls_task["sample"], algo="kavg",
+                   **dict(kw, hier=HierAvgParams(k1=6, k2=6))).run(3)
+    np.testing.assert_allclose(r1.eval_losses, r2.eval_losses, rtol=1e-5)
+
+
+def test_sync_sgd_is_k2_1(cls_task):
+    topo = HierTopology(1, 2, 2)
+    kw = dict(topo=topo, optimizer=sgd(0.05), seed=7,
+              eval_batch=cls_task["eval_batch"], per_learner_batch=8)
+    r1 = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                   cls_task["sample"], algo="hier",
+                   hier=HierAvgParams(1, 1), **kw).run(3)
+    r2 = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                   cls_task["sample"], algo="sync",
+                   hier=HierAvgParams(1, 1), **kw).run(3)
+    np.testing.assert_allclose(r1.eval_losses, r2.eval_losses, rtol=1e-5)
+
+
+def test_round_ends_with_consensus(cls_task):
+    """After the global reduction all P learners hold identical params."""
+    topo = HierTopology(1, 2, 4)
+    h = HierAvgParams(k1=2, k2=4)
+    opt = sgd(0.05)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    state = init_state(topo, cls_task["init_fn"], opt,
+                       jax.random.PRNGKey(0))
+    batch = cls_task["sample"](jax.random.PRNGKey(1),
+                               h.k2 * topo.n_learners * 8)
+    shaped = jax.tree.map(
+        lambda x: x.reshape((h.beta, h.k1) + topo.shape + (8,)
+                            + x.shape[1:]), batch)
+    state, _ = round_fn(state, shaped)
+    assert _leaves_equal_across_learners(state.params, topo)
+
+
+def test_divergence_between_reductions(cls_task):
+    """Before any reduction, learners with different data have different
+    params (they really train independently)."""
+    topo = HierTopology(1, 2, 2)
+    opt = sgd(0.05)
+    step = jax.jit(make_sgd_step(cls_task["loss_fn"], opt))
+    state = init_state(topo, cls_task["init_fn"], opt, jax.random.PRNGKey(0))
+    batch = cls_task["sample"](jax.random.PRNGKey(2), topo.n_learners * 8)
+    shaped = jax.tree.map(
+        lambda x: x.reshape(topo.shape + (8,) + x.shape[1:]), batch)
+    state, _ = step(state, shaped)
+    assert not _leaves_equal_across_learners(state.params, topo)
+
+
+def test_local_average_cluster_scope():
+    """Local reduction averages within clusters only; clusters differ."""
+    topo = HierTopology(1, 2, 2)
+    base = {"w": jnp.arange(4.0).reshape(1, 2, 2)}
+    out = local_average(base)
+    np.testing.assert_allclose(np.asarray(out["w"][0, 0]), [0.5, 0.5])
+    np.testing.assert_allclose(np.asarray(out["w"][0, 1]), [2.5, 2.5])
+    g = global_average(base)
+    np.testing.assert_allclose(np.asarray(g["w"]), 1.5 * np.ones((1, 2, 2)))
+
+
+def test_step_api_matches_round_api(cls_task):
+    """make_hier_step applied K2 times == make_hier_round once."""
+    topo = HierTopology(1, 2, 2)
+    h = HierAvgParams(k1=2, k2=4)
+    opt = sgd(0.05)
+    key = jax.random.PRNGKey(3)
+    state_a = init_state(topo, cls_task["init_fn"], opt, key)
+    state_b = init_state(topo, cls_task["init_fn"], opt, key)
+    n = h.k2 * topo.n_learners * 4
+    batch = cls_task["sample"](jax.random.PRNGKey(4), n)
+    shaped = jax.tree.map(
+        lambda x: x.reshape((h.beta, h.k1) + topo.shape + (4,)
+                            + x.shape[1:]), batch)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    state_a, _ = round_fn(state_a, shaped)
+
+    step_fn = jax.jit(make_hier_step(cls_task["loss_fn"], opt, h))
+    for b in range(h.beta):
+        for k in range(h.k1):
+            mb = jax.tree.map(lambda x: x[b, k], shaped)
+            state_b, _ = step_fn(state_b, mb)
+    for la, lb in zip(jax.tree.leaves(state_a.params),
+                      jax.tree.leaves(state_b.params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_microbatch_grad_accumulation_equivalence(cls_task):
+    """microbatch=2 gives the same update as microbatch=1 (linear loss in
+    batch -> identical mean gradient)."""
+    topo = HierTopology(1, 1, 2)
+    opt = sgd(0.05)
+    key = jax.random.PRNGKey(5)
+    s1 = init_state(topo, cls_task["init_fn"], opt, key)
+    s2 = init_state(topo, cls_task["init_fn"], opt, key)
+    batch = cls_task["sample"](jax.random.PRNGKey(6), topo.n_learners * 8)
+    shaped = jax.tree.map(
+        lambda x: x.reshape(topo.shape + (8,) + x.shape[1:]), batch)
+    st1 = jax.jit(make_sgd_step(cls_task["loss_fn"], opt, microbatch=1))
+    st2 = jax.jit(make_sgd_step(cls_task["loss_fn"], opt, microbatch=2))
+    s1, _ = st1(s1, shaped)
+    s2, _ = st2(s2, shaped)
+    for la, lb in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_hier_avg_converges(cls_task):
+    topo = HierTopology(1, 2, 4)
+    sim = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                    cls_task["sample"], topo=topo,
+                    hier=HierAvgParams(k1=2, k2=8), optimizer=sgd(0.1),
+                    eval_batch=cls_task["eval_batch"], seed=1,
+                    per_learner_batch=16)
+    r = sim.run(10)
+    assert r.eval_losses[-1] < 0.7 * r.eval_losses[0]
+    assert r.eval_accs[-1] > 0.6
+
+
+def test_bf16_averaging_converges(cls_task):
+    """Beyond-paper: reductions computed in bf16 (half all-reduce payload)
+    track fp32 averaging closely on a real task."""
+    import jax.numpy as jnp
+    from repro.core.hier_avg import init_state
+    topo = HierTopology(1, 2, 4)
+    h = HierAvgParams(k1=2, k2=4)
+    opt = sgd(0.05)
+    key = jax.random.PRNGKey(9)
+    batch = cls_task["sample"](jax.random.PRNGKey(10),
+                               h.k2 * topo.n_learners * 8)
+    shaped = jax.tree.map(
+        lambda x: x.reshape((h.beta, h.k1) + topo.shape + (8,)
+                            + x.shape[1:]), batch)
+    r32 = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    r16 = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h,
+                                  avg_dtype=jnp.bfloat16))
+    sa = init_state(topo, cls_task["init_fn"], opt, key)
+    sb = init_state(topo, cls_task["init_fn"], opt, key)
+    for _ in range(3):
+        sa, ma = r32(sa, shaped)
+        sb, mb = r16(sb, shaped)
+    assert abs(float(ma["loss"]) - float(mb["loss"])) < 0.02
+
+
+def test_adaptive_k2_controller():
+    """AdaptiveK2: large K2 far from optimum, shrinks toward K1 as the loss
+    falls, always keeps K1 | K2 (paper §3.3 heuristic)."""
+    from repro.core import AdaptiveK2
+    ctl = AdaptiveK2(k1=4, k2_max=64)
+    assert ctl.k2_for(10.0) == 64          # initial loss -> max interval
+    k_half = ctl.k2_for(5.0)
+    k_tenth = ctl.k2_for(0.15)
+    assert 4 <= k_tenth <= k_half <= 64
+    assert k_half % 4 == 0 and k_tenth % 4 == 0
+    h = ctl.params_for(0.15)
+    assert h.k1 == 4 and h.k2 == k_tenth

@@ -1,0 +1,97 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import global_average, local_average, pod_average
+from repro.core.theory import (third_term_poly, thm34_objective,
+                               thm36_hier_bound, thm36_kavg_bound)
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+shapes = st.tuples(st.integers(1, 2), st.integers(1, 3), st.integers(1, 4))
+
+
+@given(shapes, st.integers(0, 2 ** 31 - 1))
+def test_averaging_preserves_global_mean(shape, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape + (3,))
+    for avg in (local_average, global_average, pod_average):
+        y = avg({"w": x})["w"]
+        np.testing.assert_allclose(float(y.mean()), float(x.mean()),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@given(shapes, st.integers(0, 2 ** 31 - 1))
+def test_averaging_idempotent(shape, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape + (2,))
+    for avg in (local_average, global_average):
+        y = avg({"w": x})["w"]
+        z = avg({"w": y})["w"]
+        np.testing.assert_allclose(np.asarray(z), np.asarray(y), rtol=1e-6)
+
+
+@given(shapes, st.integers(0, 2 ** 31 - 1))
+def test_global_after_local_equals_global(shape, seed):
+    """Hierarchy consistency: local then global == global (means of means
+    with equal cluster sizes)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape + (2,))
+    a = global_average(local_average({"w": x}))["w"]
+    b = global_average({"w": x})["w"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+@given(st.integers(1, 64), st.integers(2, 16), st.integers(1, 32))
+def test_thm35_third_term_monotone_in_k1(k1, s, k2_extra):
+    """Theorem 3.5(1): the bound's K1/S polynomial is non-decreasing in K1
+    (for K1 >= 2, S > 1, K2 >= K1)."""
+    k2 = k1 + k2_extra
+    if k1 + 1 > k2:
+        return
+    a = third_term_poly(k2, k1, s)
+    b = third_term_poly(k2, min(k1 + 1, k2), s)
+    assert b >= a - 1e-9
+
+
+@given(st.integers(1, 64), st.integers(1, 15), st.integers(0, 64))
+def test_thm35_third_term_decreasing_in_s(k1, s, k2_extra):
+    """Theorem 3.5(2): strictly decreasing in S."""
+    k2 = k1 + k2_extra
+    a = third_term_poly(k2, k1, s)
+    b = third_term_poly(k2, k1, s + 1)
+    assert b <= a + 1e-9
+
+
+@given(st.integers(2, 64), st.floats(0.0, 0.6),
+       st.floats(1e-4, 1.0), st.floats(1e-6, 1e-2))
+def test_thm36_hier_beats_kavg(k, a, alpha, eta):
+    """Theorem 3.6: H(K) < chi(K) for K >= 2, a in [0, 0.6] — Hier-AVG with
+    K2=(1+a)K, K1=1, S=4 has a strictly smaller bound than K-AVG(K)."""
+    h = thm36_hier_bound(k, a, alpha, eta)
+    c = thm36_kavg_bound(k, alpha, eta)
+    assert h < c + 1e-12
+
+
+@given(st.floats(1e-3, 10.0), st.floats(1e-7, 1e-3), st.floats(1e-9, 1e-5),
+       st.integers(1, 8), st.integers(1, 16))
+def test_thm34_objective_positive_and_k2_search(alpha, beta, eta, k1, s):
+    """B(K2) is positive and the argmin over K2 is well defined."""
+    vals = [thm34_objective(k2, k1, s, alpha, beta, eta)
+            for k2 in [1] + list(range(k1, 65, k1))]
+    assert all(v > 0 for v in vals)
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+def test_consensus_invariant_after_global_average(p, g, s, seed):
+    """All learners equal after global averaging, for any topology shape."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (p, g, s, 5))
+    y = global_average({"w": x})["w"]
+    flat = y.reshape(p * g * s, 5)
+    assert bool(jnp.allclose(flat, flat[0:1], atol=1e-6))

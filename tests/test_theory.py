@@ -1,0 +1,89 @@
+"""Numeric validation of the paper's theorems as stated."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.schedules import thm31_gamma, thm31_k2
+from repro.core.theory import (CommModel, comm_advantage, comm_per_k2_steps,
+                               optimal_k2, third_term_poly, thm31_bound,
+                               thm31_rate_at_optimum, thm32_bound,
+                               thm32_condition, thm34_condition, thm34_terms,
+                               thm36_hier_bound, thm36_kavg_bound)
+
+
+def test_thm31_rate_matches_bound_at_optimum():
+    """Plugging gamma=sqrt(PB/T), K2=T^.25/(PB)^.75 into (3.2) gives (3.4)."""
+    F0, L, M, MG = 5.0, 2.0, 1.0, 1.0
+    P, B, T = 16, 32, 2 ** 24
+    gamma = thm31_gamma(P, B, T)
+    k2 = T ** 0.25 / (P * B) ** 0.75
+    lhs = thm31_bound(F0, L, M, MG, gamma, k2, P, B, T)
+    rhs = thm31_rate_at_optimum(F0, L, M, MG, P, B, T)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9)
+
+
+def test_thm31_standard_rate_scaling():
+    """The optimized bound scales as 1/sqrt(PBT)."""
+    F0, L, M, MG = 5.0, 2.0, 1.0, 1.0
+    r1 = thm31_rate_at_optimum(F0, L, M, MG, 16, 32, 1 << 20)
+    r2 = thm31_rate_at_optimum(F0, L, M, MG, 16, 32, 1 << 22)
+    np.testing.assert_allclose(r1 / r2, 2.0, rtol=1e-9)
+    r3 = thm31_rate_at_optimum(F0, L, M, MG, 64, 32, 1 << 20)
+    np.testing.assert_allclose(r1 / r3, 2.0, rtol=1e-9)
+
+
+def test_thm32_bound_reduces_to_kavg_form():
+    """K1=1, S=1 (or K1=K2): the K1/S polynomial becomes (K2-1)(4K2-2)
+    -> the K-AVG third term; with K1=K2 the S term vanishes entirely."""
+    k2 = 16
+    poly_kavg = third_term_poly(k2, 1, 1)
+    assert poly_kavg == (k2 - 1) * (4 * k2 - 2)
+    poly_eq = third_term_poly(k2, k2, 7)
+    assert poly_eq == (k2 - 1) * (4 * k2 - 2)  # S drops out when K1=K2
+
+
+def test_thm32_condition_small_gamma():
+    assert thm32_condition(L=10.0, gamma=1e-4, K2=32)
+    assert not thm32_condition(L=10.0, gamma=0.5, K2=32)
+
+
+def test_thm34_condition_far_from_optimum():
+    """Large F1-F* satisfies (3.11) -> some K2 > 1 is faster; tiny F1-F*
+    does not."""
+    L, M, gamma, T, P, B, S = 2.0, 1.0, 0.01, 10_000, 16, 32, 4
+    assert thm34_condition(1e3, L, M, gamma, T, P, B, S)
+    assert not thm34_condition(1e-6, L, M, gamma, T, P, B, S)
+    # and the argmin indeed moves off 1
+    alpha, beta, eta = thm34_terms(1e3, L, M, gamma, T, P, B)
+    assert optimal_k2(4, S, alpha, beta, eta) > 1
+    alpha, beta, eta = thm34_terms(1e-6, L, M, gamma, T, P, B)
+    assert optimal_k2(4, S, alpha, beta, eta) == 1
+
+
+def test_thm35_monotonicity_exact():
+    for k2 in (8, 32, 128):
+        vals_k1 = [third_term_poly(k2, k1, 4) for k1 in range(2, k2 + 1)]
+        assert all(b >= a for a, b in zip(vals_k1, vals_k1[1:]))
+        vals_s = [third_term_poly(k2, 4, s) for s in range(1, 17)]
+        assert all(b <= a for a, b in zip(vals_s, vals_s[1:]))
+
+
+def test_thm36_dominance_region():
+    for k in (2, 8, 32, 128):
+        for a in (0.0, 0.2, 0.4, 0.6):
+            assert thm36_hier_bound(k, a, 0.1, 1e-4) < \
+                thm36_kavg_bound(k, 0.1, 1e-4)
+
+
+def test_comm_model_hier_saves_over_kavg():
+    """The paper's motivation quantified: at equal data, Hier-AVG spends
+    less reduction time than K-AVG once P is large."""
+    model_bytes = 1e9  # ~500M params bf16
+    for P in (16, 32, 64, 256):
+        adv = comm_advantage(model_bytes, K=8, a=0.5, P=P, S=4)
+        assert adv > 0, P
+    # and local reductions really are cheaper than global ones
+    cm = CommModel()
+    loc, glo = comm_per_k2_steps(model_bytes, 1, 12, P=64, S=4, cm=cm)
+    assert loc / max(12 // 1 - 1, 1) < glo  # per-event local << global
