@@ -1,0 +1,52 @@
+"""Reducer sweep: payload bytes vs converged accuracy (comm/).
+
+For each reducer x (K1, K2, S) grid point, run the simulator on the shared
+classification task and report the per-learner global-reduction payload,
+the compression factor vs the dense fp32 mean, and the converged eval
+accuracy (delta vs dense mean on the same grid point).  This quantifies the
+PR's claim: reductions can be sparse in *payload* (topk 10% -> ~5x fewer
+wire bytes) on top of the paper's sparsity in *time* (K2 >> K1), at parity
+accuracy.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import HierAvgParams
+from repro.core import HierTopology, Simulator
+from repro.optim import sgd
+from benchmarks.common import Row, cls_setup, timed_run
+
+REDUCERS = ("mean", "cast:bfloat16", "qint8:128", "topk:0.1", "randk:0.1")
+GRID = (  # (K1, K2, S) with P = 8 learners
+    (2, 8, 4),
+    (4, 16, 2),
+)
+ROUNDS = 12
+
+
+def run() -> List[Row]:
+    setup = cls_setup()
+    rows: List[Row] = []
+    for k1, k2, s in GRID:
+        topo = HierTopology(pods=1, groups=8 // s, local=s)
+        dense_acc = None
+        dense_bytes = None
+        for spec in REDUCERS:
+            hier = HierAvgParams(k1=k1, k2=k2, reducer=spec)
+            sim = Simulator(setup["loss_fn"], setup["init_fn"],
+                            setup["sample"], topo=topo, hier=hier,
+                            optimizer=sgd(0.1), per_learner_batch=16,
+                            eval_batch=setup["eval_batch"], seed=3)
+            res, us = timed_run(sim, ROUNDS)
+            payload = sim.payload_bytes_per_reduction()
+            if spec == "mean":
+                dense_acc = res.final_eval_acc
+                dense_bytes = payload
+            derived = (f"payload_B={payload} "
+                       f"reduction_x={dense_bytes / payload:.2f} "
+                       f"eval_acc={res.final_eval_acc:.4f} "
+                       f"acc_vs_dense={res.final_eval_acc - dense_acc:+.4f}")
+            rows.append(
+                (f"compress/K1={k1},K2={k2},S={s}/{spec}", us, derived))
+    return rows

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_adaptive_k2 -> paper §3.3 'adaptive K2' remark (beyond-paper ablation)
   bench_layouts     -> beyond-paper per-arch layout optimization sweep
   bench_comm        -> the paper's communication-saving claim, quantified
+  bench_compression -> reducer sweep: payload bytes vs converged accuracy
   roofline          -> §Roofline rows from the dry-run artifacts (if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig1]
@@ -25,9 +26,9 @@ def main() -> None:
                     help="substring filter on benchmark module name")
     args = ap.parse_args()
 
-    from benchmarks import (bench_adaptive_k2, bench_comm, bench_k1_s,
-                            bench_k2, bench_large_proxy, bench_layouts,
-                            bench_vs_kavg, roofline)
+    from benchmarks import (bench_adaptive_k2, bench_comm, bench_compression,
+                            bench_k1_s, bench_k2, bench_large_proxy,
+                            bench_layouts, bench_vs_kavg, roofline)
     suites = [
         ("bench_k2", bench_k2.run),
         ("bench_k1_s", bench_k1_s.run),
@@ -36,6 +37,7 @@ def main() -> None:
         ("bench_adaptive_k2", bench_adaptive_k2.run),
         ("bench_layouts", bench_layouts.run),
         ("bench_comm", bench_comm.run),
+        ("bench_compression", bench_compression.run),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Fast test tier + Pallas-interpret kernel checks — the pre-push gate.
+#
+#   scripts/test_fast.sh            # < 60s on CPU
+#   scripts/test_fast.sh -k comm    # pass extra pytest args through
+#
+# The fast tier is the default pytest invocation (pyproject.toml deselects
+# @pytest.mark.slow); the kernel suite re-runs explicitly so every Pallas
+# kernel is validated against its XLA oracle (interpret mode, no TPU
+# needed) even if parts of it are ever marked slow.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== fast tier =="
+python -m pytest -x -q "$@"
+
+echo "== pallas_interpret kernel checks =="
+python -m pytest -x -q -m "" tests/test_kernels.py

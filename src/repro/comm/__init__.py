@@ -1,0 +1,44 @@
+"""Compressed-reduction subsystem: pluggable reducers for Hier-AVG.
+
+Pick a reducer by spec string (``HierAvgParams.reducer`` / ``--reducer``):
+
+    "mean"                dense full-precision mean (today's behavior)
+    "cast[:dtype]"        narrow payload dtype, default bfloat16
+                          (replaces the removed ``avg_dtype`` knob)
+    "topk[:ratio]"        magnitude top-k of the delta, error feedback
+    "randk[:ratio]"       shared-support random-k, error feedback
+    "qint8[:block]"       per-block int8 scale quantization
+
+e.g. ``get_reducer("topk:0.05")`` transmits 5% of coordinates.
+"""
+from repro.comm.reducer import (CastReducer, MeanReducer,  # noqa: F401
+                                Reducer, reduce_with)
+from repro.comm.sparse import (EFState, RandKReducer,  # noqa: F401
+                               TopKReducer)
+from repro.comm.quant import QInt8Reducer  # noqa: F401
+
+REDUCER_NAMES = ("mean", "cast", "topk", "randk", "qint8")
+
+
+def get_reducer(spec, **kw) -> Reducer:
+    """Resolve a reducer from a spec string (or pass a Reducer through).
+
+    ``kw`` (e.g. ``impl="pallas"`` for sparse reducers) overrides defaults.
+    """
+    if isinstance(spec, Reducer):
+        return spec
+    if spec is None:
+        return MeanReducer()
+    name, _, arg = str(spec).partition(":")
+    if name == "mean":
+        return MeanReducer()
+    if name == "cast":
+        return CastReducer(arg or "bfloat16")
+    if name == "topk":
+        return TopKReducer(float(arg or 0.1), **kw)
+    if name == "randk":
+        return RandKReducer(float(arg or 0.1), **kw)
+    if name == "qint8":
+        return QInt8Reducer(int(arg or 256))
+    raise ValueError(
+        f"unknown reducer spec {spec!r}; known: {REDUCER_NAMES}")

@@ -1,0 +1,149 @@
+"""Pluggable compressed reducers for Hier-AVG's local/global reductions.
+
+The paper makes the global reduction sparse *in time* (K2 >> K1).  Reducers
+make every reduction sparse *in payload* as well: a :class:`Reducer` defines
+what each learner puts on the wire.
+
+    payload, state = reducer.compress(tree, state)     # per-learner payload
+    xhat = reducer.decompress(payload, tree, state)    # learner approximation
+    out = avg_fn(xhat, constraint_fn)                  # grouped all-reduce
+    out, state = reducer.finalize(out, tree, state)    # dtype/EF bookkeeping
+
+so the reduction becomes ``mean_j xhat_j`` over each learner's
+reconstruction.  Wire-cost caveat: in this stacked-learner formulation the
+grouped all-reduce itself moves the *reconstructed* leaves — the ``cast``
+reducer genuinely narrows the reduce words (the mean runs in the payload
+dtype), but for topk/randk/qint8 the payload savings reported by
+``payload_bytes`` model what a payload-aware collective (sparse/quantized
+all-gather) would transmit, not what this lowering puts on the wire.  What
+is exact everywhere is the *numerics*: training sees precisely the
+information a compressed link would deliver, which is what the convergence
+benchmarks measure.  Error-feedback reducers (comm/sparse.py) carry
+residual state threaded through ``TrainState.comm_state``.
+
+Layout contract: every leaf carries the stacked-learner axes
+[pods, G, S, *shape] (see core/topology.py); reducers compress each
+learner's trailing ``*shape`` dims independently.  ``payload_bytes`` is the
+analytic per-learner wire size and expects a *single-learner* tree (no
+learner axes).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+N_LEARNER_AXES = 3   # [pods, G, S] — the stacked-learner leading axes
+
+
+def learner_shape(leaf) -> Tuple[int, ...]:
+    """Per-learner trailing shape of a stacked leaf."""
+    return tuple(leaf.shape[N_LEARNER_AXES:])
+
+
+def per_learner_size(leaf) -> int:
+    n = 1
+    for d in learner_shape(leaf):
+        n *= d
+    return n
+
+
+class Reducer:
+    """Base reducer == today's dense full-precision mean (identity codec).
+
+    Subclasses override ``compress``/``decompress`` (and ``finalize`` for
+    dtype restoration or error-feedback reference updates).  Stateless
+    reducers keep ``init_state`` returning ``()`` so ``TrainState`` is
+    unchanged for the default path.
+    """
+
+    name = "mean"
+    stateful = False
+
+    # -- carried state -------------------------------------------------- #
+    def init_state(self, params) -> Any:
+        return ()
+
+    # -- codec ---------------------------------------------------------- #
+    def compress(self, tree, state) -> Tuple[Any, Any]:
+        return tree, state
+
+    def decompress(self, payload, like, state):
+        """Reconstruct each learner's approximation.  ``like`` is the
+        original tree, used only as a shape/dtype template."""
+        return payload
+
+    def finalize(self, avg_tree, orig_tree, state) -> Tuple[Any, Any]:
+        """Post-reduction hook: restore dtypes / update EF references."""
+        return avg_tree, state
+
+    # -- accounting ----------------------------------------------------- #
+    def payload_bytes(self, tree) -> int:
+        """Wire bytes one learner transmits per reduction (single-learner
+        tree)."""
+        return int(sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+                       for leaf in jax.tree.leaves(tree)))
+
+    def describe(self) -> str:
+        return self.name
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.describe()})"
+
+
+MeanReducer = Reducer
+
+
+class CastReducer(Reducer):
+    """Narrow-dtype payload (bf16/fp16/fp8): the all-reduce moves
+    ``payload_dtype`` words; master params keep their dtype.
+
+    This absorbs the old ``avg_dtype`` special case of ``make_hier_round``
+    exactly: for >=16-bit payloads the mean itself is computed in the
+    payload dtype (what ``avg_dtype`` did); sub-16-bit payloads (fp8)
+    accumulate in bf16 since XLA has no fp8 reduction arithmetic.
+    """
+
+    name = "cast"
+
+    def __init__(self, dtype=jnp.bfloat16):
+        self.payload_dtype = jnp.dtype(dtype)
+        self.acc_dtype = (self.payload_dtype
+                          if self.payload_dtype.itemsize >= 2 else
+                          jnp.dtype(jnp.bfloat16))
+
+    def compress(self, tree, state):
+        return jax.tree.map(
+            lambda x: x.astype(self.payload_dtype), tree), state
+
+    def decompress(self, payload, like, state):
+        if self.acc_dtype == self.payload_dtype:
+            return payload
+        return jax.tree.map(lambda x: x.astype(self.acc_dtype), payload)
+
+    def finalize(self, avg_tree, orig_tree, state):
+        out = jax.tree.map(lambda a, o: a.astype(o.dtype),
+                           avg_tree, orig_tree)
+        return out, state
+
+    def payload_bytes(self, tree) -> int:
+        return int(sum(leaf.size * self.payload_dtype.itemsize
+                       for leaf in jax.tree.leaves(tree)))
+
+    def describe(self) -> str:
+        return f"cast:{self.payload_dtype.name}"
+
+
+def reduce_with(reducer: Reducer, avg_fn: Callable, tree, state,
+                constraint_fn: Optional[Callable] = None):
+    """Run one compressed reduction: compress -> decompress -> average ->
+    finalize.  ``avg_fn(tree, constraint_fn)`` is one of the grouped means
+    from core/topology.py (local_average / global_average / pod_average).
+
+    Returns ``(averaged_tree, new_reducer_state)``.
+    """
+    payload, state = reducer.compress(tree, state)
+    xhat = reducer.decompress(payload, tree, state)
+    out = avg_fn(xhat, constraint_fn)
+    return reducer.finalize(out, tree, state)

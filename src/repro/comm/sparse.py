@@ -1,0 +1,141 @@
+"""Sparse (top-k / random-k) reducers with error feedback.
+
+Each learner transmits only k coordinates of its *delta since the last
+reduction* plus the accumulated error-feedback residual (Stich et al.,
+arXiv:1805.09767 — memory/EF makes sparsified averaging converge at the
+dense rate):
+
+    delta_j = (w_j - ref_j) + e_j            # progress + carried residual
+    payload = select_k(delta_j)              # magnitude top-k or random-k
+    e_j'    = delta_j - dense(payload)       # what was NOT transmitted
+    xhat_j  = ref_j + dense(payload)
+    out     = mean_j xhat_j ; ref <- out     # reference tracks consensus
+
+The reference/residual pair lives in :class:`EFState` and is threaded
+through ``TrainState.comm_state`` by core/hier_avg.py.  The hot compress
+path (flatten -> abs -> threshold -> gather) dispatches through
+kernels/ops.py::topk_compress (``impl="xla" | "pallas" | "pallas_interpret"``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.reducer import (N_LEARNER_AXES, Reducer, learner_shape,
+                                per_learner_size)
+from repro.kernels import ops
+
+
+class EFState(NamedTuple):
+    """Error-feedback carry, stacked like the params ([pods, G, S, *shape])."""
+    ref: Any        # each learner's view of the last reduction result
+    err: Any        # untransmitted residual, fp32
+    key: jax.Array  # PRNG key (consumed by random-k; carried by top-k)
+
+
+def _rows(leaf) -> int:
+    r = 1
+    for d in leaf.shape[:N_LEARNER_AXES]:
+        r *= d
+    return r
+
+
+def _scatter_rows(vals, idx, n):
+    """Dense [rows, n] from per-row (vals, idx) — the decompress scatter."""
+    rows = vals.shape[0]
+    out = jnp.zeros((rows, n), jnp.float32)
+    return out.at[jnp.arange(rows)[:, None], idx].set(
+        vals.astype(jnp.float32))
+
+
+class _SparseEFReducer(Reducer):
+    """Shared machinery for top-k / random-k; subclasses pick the support."""
+
+    stateful = True
+
+    def __init__(self, ratio: float = 0.1, impl: str = "xla"):
+        if not 0.0 < ratio <= 1.0:
+            raise ValueError(
+                f"{self.name} ratio must be in (0, 1], got {ratio}")
+        self.ratio = float(ratio)
+        self.impl = impl
+
+    def k_for(self, n: int) -> int:
+        return max(1, min(n, int(round(self.ratio * n))))
+
+    def init_state(self, params) -> EFState:
+        err = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return EFState(ref=params, err=err, key=jax.random.PRNGKey(0))
+
+    def _select(self, delta2d, k: int, key):  # -> (vals, idx) per row
+        raise NotImplementedError
+
+    def compress(self, tree, state: EFState):
+        key, sub = jax.random.split(state.key)
+        leaves, treedef = jax.tree.flatten(tree)
+        refs = jax.tree.leaves(state.ref)
+        errs = jax.tree.leaves(state.err)
+        payload, new_errs = [], []
+        for i, (x, r, e) in enumerate(zip(leaves, refs, errs)):
+            rows, n = _rows(x), per_learner_size(x)
+            delta = (x.astype(jnp.float32) - r.astype(jnp.float32)
+                     ).reshape(rows, n) + e.reshape(rows, n)
+            vals, idx = self._select(delta, self.k_for(n),
+                                     jax.random.fold_in(sub, i))
+            new_errs.append(
+                (delta - _scatter_rows(vals, idx, n)).reshape(e.shape))
+            payload.append((vals, idx))
+        return payload, EFState(state.ref, treedef.unflatten(new_errs), key)
+
+    def decompress(self, payload, like, state: EFState):
+        leaves, treedef = jax.tree.flatten(like)
+        refs = jax.tree.leaves(state.ref)
+        xhat = []
+        for (vals, idx), x, r in zip(payload, leaves, refs):
+            dense = _scatter_rows(vals, idx, per_learner_size(x))
+            xhat.append(r.astype(jnp.float32)
+                        + dense.reshape(x.shape))
+        return treedef.unflatten(xhat)
+
+    def finalize(self, avg_tree, orig_tree, state: EFState):
+        out = jax.tree.map(lambda a, o: a.astype(o.dtype),
+                           avg_tree, orig_tree)
+        # the averaged result is every learner's next reference
+        return out, state._replace(ref=out)
+
+    def payload_bytes(self, tree) -> int:
+        # fp32 value + int32 index per transmitted coordinate
+        return int(sum(self.k_for(leaf.size) * 8
+                       for leaf in jax.tree.leaves(tree)))
+
+    def describe(self) -> str:
+        return f"{self.name}:{self.ratio:g}"
+
+
+class TopKReducer(_SparseEFReducer):
+    """Per-leaf magnitude top-k of the EF-corrected delta."""
+
+    name = "topk"
+
+    def _select(self, delta2d, k, key):
+        return ops.topk_compress(delta2d, k, impl=self.impl)
+
+
+class RandKReducer(_SparseEFReducer):
+    """Random-k with a shared support: all learners transmit the same k
+    coordinates each round (drawn fresh from the carried key), so the
+    grouped mean of the sparse payloads is itself k-sparse.  Unselected
+    coordinates ride the EF residual into a later round."""
+
+    name = "randk"
+
+    def _select(self, delta2d, k, key):
+        n = delta2d.shape[1]
+        idx = jax.random.choice(key, n, shape=(k,), replace=False)
+        idx = jnp.sort(idx).astype(jnp.int32)
+        idx2d = jnp.broadcast_to(idx[None, :], (delta2d.shape[0], k))
+        vals = jnp.take_along_axis(delta2d, idx2d, axis=1)
+        return vals, idx2d

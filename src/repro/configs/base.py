@@ -59,12 +59,17 @@ class HierAvgParams:
     k2: int = 8          # global-averaging interval; beta = k2 // k1
     # S (cluster size) comes from ParallelLayout.local / topology, and P from
     # the topology's total learner count.
+    reducer: str = "mean"  # reduction payload spec, e.g. "topk:0.1" (comm/)
 
     def __post_init__(self):
         if self.k1 < 1 or self.k2 < self.k1:
             raise ValueError(f"need 1 <= K1 <= K2, got K1={self.k1} K2={self.k2}")
         if self.k2 % self.k1 != 0:
             raise ValueError(f"K2 ({self.k2}) must be a multiple of K1 ({self.k1})")
+        # lazy import: comm owns spec parsing; resolving (and discarding)
+        # the reducer validates family AND arguments at config-build time
+        from repro.comm import get_reducer
+        get_reducer(self.reducer)
 
     @property
     def beta(self) -> int:

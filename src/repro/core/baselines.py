@@ -20,20 +20,24 @@ from repro.optim import Optimizer
 
 def make_kavg_round(loss_fn: Callable, optimizer: Optimizer, k: int, *,
                     constraint_fn: Optional[Callable] = None,
-                    grad_postprocess: Optional[Callable] = None):
+                    grad_postprocess: Optional[Callable] = None,
+                    reducer=None):
     """K-AVG with averaging interval K: local reductions disabled."""
     hier = HierAvgParams(k1=k, k2=k)
     return make_hier_round(loss_fn, optimizer, hier, skip_local=True,
                            constraint_fn=constraint_fn,
-                           grad_postprocess=grad_postprocess)
+                           grad_postprocess=grad_postprocess,
+                           reducer=reducer)
 
 
 def make_sync_sgd_round(loss_fn: Callable, optimizer: Optimizer, *,
                         constraint_fn: Optional[Callable] = None,
-                        grad_postprocess: Optional[Callable] = None):
+                        grad_postprocess: Optional[Callable] = None,
+                        reducer=None):
     """Fully synchronous parallel SGD: one round == one step == one
     global reduction."""
     hier = HierAvgParams(k1=1, k2=1)
     return make_hier_round(loss_fn, optimizer, hier, skip_local=True,
                            constraint_fn=constraint_fn,
-                           grad_postprocess=grad_postprocess)
+                           grad_postprocess=grad_postprocess,
+                           reducer=reducer)

@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import Reducer, get_reducer, reduce_with
 from repro.configs.base import HierAvgParams
 from repro.core.topology import (HierTopology, global_average, local_average,
                                  stack_like)
@@ -36,15 +37,22 @@ class TrainState(NamedTuple):
     params: Any          # leaves [pods, G, S, *shape]
     opt_state: Any       # same stacking
     step: jax.Array      # scalar int32 — local SGD steps taken
+    comm_state: Any = () # reducer carry (comm/): EF residuals etc.
 
 
-def init_state(topo: HierTopology, init_fn, optimizer: Optimizer, key
-               ) -> TrainState:
-    """All learners start from the same w_1 (paper's initialization)."""
+def init_state(topo: HierTopology, init_fn, optimizer: Optimizer, key,
+               reducer: Optional[Reducer] = None) -> TrainState:
+    """All learners start from the same w_1 (paper's initialization).
+
+    ``reducer`` must match the one the round/step function was built with
+    (stateful reducers carry per-learner state in ``comm_state``).
+    """
     params1 = init_fn(key)
     params = stack_like(topo, params1)
     opt_state = optimizer.init(params)
-    return TrainState(params, opt_state, jnp.zeros((), jnp.int32))
+    comm_state = reducer.init_state(params) if reducer is not None else ()
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32),
+                      comm_state)
 
 
 def stacked_grad_fn(loss_fn: Callable):
@@ -111,9 +119,19 @@ def make_sgd_step(loss_fn: Callable, optimizer: Optimizer,
             grads = grad_postprocess(grads)
         params, opt_state = optimizer.update(grads, state.params,
                                              state.opt_state, state.step)
-        return TrainState(params, opt_state, state.step + 1), metrics
+        return state._replace(params=params, opt_state=opt_state,
+                              step=state.step + 1), metrics
 
     return step
+
+
+def resolve_reducer(hier: HierAvgParams,
+                    reducer: Optional[Any] = None) -> Reducer:
+    """An explicit ``reducer`` (spec string or instance) wins; otherwise the
+    config's ``hier.reducer`` spec decides (default "mean")."""
+    if reducer is not None:
+        return get_reducer(reducer)
+    return get_reducer(getattr(hier, "reducer", "mean"))
 
 
 def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
@@ -123,7 +141,7 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
                     constraint_fn: Optional[Callable] = None,
                     grad_postprocess: Optional[Callable] = None,
                     microbatch: int = 1,
-                    avg_dtype=None):
+                    reducer: Optional[Any] = None):
     """Build the jitted Hier-AVG round.
 
     round(state, round_batch) -> (state, metrics); round_batch leaves are
@@ -134,41 +152,35 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
     reduction (beyond-paper option; default False keeps momentum local,
     matching the paper's parameter-only averaging).
 
-    ``avg_dtype`` (beyond-paper): compute the reductions in a narrower dtype
-    (e.g. jnp.bfloat16) — on hardware the all-reduce payload halves; the
-    master params keep their dtype.  Convergence impact is validated in
-    tests/test_hier_avg.py::test_bf16_averaging_converges.
+    ``reducer`` (comm/): how each reduction's payload is compressed — a
+    spec string ("mean", "cast:bfloat16", "topk:0.1", ...), a Reducer
+    instance, or None to use ``hier.reducer``.  Parameters go through the
+    reducer; optimizer state (when ``sync_opt_state``) is always dense mean.
+    Stateful reducers carry ``TrainState.comm_state`` — build the initial
+    state with ``init_state(..., reducer=...)``.
     """
     sgd_step = make_sgd_step(loss_fn, optimizer, grad_postprocess,
                              microbatch=microbatch)
+    red = resolve_reducer(hier, reducer)
 
-    def _avg(avg_fn, tree):
-        if avg_dtype is None:
-            return avg_fn(tree, constraint_fn)
-        dtypes = jax.tree.map(lambda x: x.dtype, tree)
-        narrowed = jax.tree.map(lambda x: x.astype(avg_dtype), tree)
-        out = avg_fn(narrowed, constraint_fn)
-        return jax.tree.map(lambda x, d: x.astype(d), out, dtypes)
-
-    def maybe_sync_opt(opt_state, avg):
-        if not sync_opt_state:
-            return opt_state
-        return _avg(avg, opt_state)
+    def _reduce(avg_fn, state: TrainState) -> TrainState:
+        params, comm_state = reduce_with(red, avg_fn, state.params,
+                                         state.comm_state, constraint_fn)
+        if sync_opt_state:
+            state = state._replace(
+                opt_state=avg_fn(state.opt_state, constraint_fn))
+        return state._replace(params=params, comm_state=comm_state)
 
     def local_phase(state: TrainState, batches):
         """K1 SGD steps then one local reduction."""
         state, metrics = jax.lax.scan(sgd_step, state, batches)
         if not skip_local:
-            state = state._replace(
-                params=_avg(local_average, state.params),
-                opt_state=maybe_sync_opt(state.opt_state, local_average))
+            state = _reduce(local_average, state)
         return state, metrics
 
     def round_fn(state: TrainState, round_batch):
         state, metrics = jax.lax.scan(local_phase, state, round_batch)
-        state = state._replace(
-            params=_avg(global_average, state.params),
-            opt_state=maybe_sync_opt(state.opt_state, global_average))
+        state = _reduce(global_average, state)
         # metrics leaves: [beta, K1, pods, G, S] -> scalar means
         metrics = jax.tree.map(lambda m: m.mean(), metrics)
         return state, metrics
@@ -183,11 +195,22 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
 def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
                    hier: HierAvgParams, *,
                    skip_local: bool = False,
-                   constraint_fn: Optional[Callable] = None):
+                   constraint_fn: Optional[Callable] = None,
+                   reducer: Optional[Any] = None):
     """Single-step variant: applies local/global averaging via masking on the
     step counter.  Semantics identical to the round API; useful when K1/K2
-    change adaptively between rounds."""
+    change adaptively between rounds.
+
+    Reducers apply here too (compress runs every step; the result and any
+    carried comm state are masked in only on reduction steps).  The K2-step
+    equivalence with ``make_hier_round`` is exact for the dense "mean"
+    reducer (tests/test_hier_avg.py::test_step_api_matches_round_api); for
+    compressed reducers the round API fuses the final local+global
+    reductions while the step API applies only the global one, so the two
+    trajectories differ by the compression of an already-averaged delta.
+    """
     sgd_step = make_sgd_step(loss_fn, optimizer)
+    red = resolve_reducer(hier, reducer)
 
     def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
         state, metrics = sgd_step(state, batch)
@@ -196,17 +219,21 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
                                    (t % hier.k2) != 0)
         do_global = (t % hier.k2) == 0
 
-        def blend(avg_tree, mask):
+        def blend(new_tree, old_tree, mask):
             return jax.tree.map(
-                lambda a, p: jnp.where(mask, a, p), avg_tree, state.params)
+                lambda a, p: jnp.where(mask, a, p), new_tree, old_tree)
 
-        params = state.params
+        params, cs = state.params, state.comm_state
         if not skip_local:
-            params = blend(local_average(params, constraint_fn), do_local)
-        params = jax.tree.map(
-            lambda a, p: jnp.where(do_global, a, p),
-            global_average(params, constraint_fn), params)
-        return state._replace(params=params), metrics
+            red_p, red_cs = reduce_with(red, local_average, params, cs,
+                                        constraint_fn)
+            params = blend(red_p, params, do_local)
+            cs = blend(red_cs, cs, do_local)
+        red_p, red_cs = reduce_with(red, global_average, params, cs,
+                                    constraint_fn)
+        params = blend(red_p, params, do_global)
+        cs = blend(red_cs, cs, do_global)
+        return state._replace(params=params, comm_state=cs), metrics
 
     return step
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import Reducer, get_reducer
 from repro.configs.base import HierAvgParams
 from repro.core.baselines import make_kavg_round, make_sync_sgd_round
 from repro.core.hier_avg import TrainState, init_state, make_hier_round
@@ -47,7 +48,8 @@ class Simulator:
                  sample_batch: Callable, *, topo: HierTopology,
                  hier: HierAvgParams, optimizer: Optional[Optimizer] = None,
                  algo: str = "hier", per_learner_batch: int = 32,
-                 eval_batch: Optional[Any] = None, seed: int = 0):
+                 eval_batch: Optional[Any] = None, seed: int = 0,
+                 reducer: Optional[Any] = None):
         self.loss_fn = loss_fn
         self.init_fn = init_fn
         self.sample = sample_batch
@@ -57,12 +59,18 @@ class Simulator:
         self.B = per_learner_batch
         self.eval_batch = eval_batch
         self.key = jax.random.PRNGKey(seed)
+        # reducer spec/instance wins over hier.reducer (comm/)
+        self.reducer: Reducer = get_reducer(
+            reducer if reducer is not None else hier.reducer)
         if algo == "hier":
-            rnd = make_hier_round(loss_fn, self.optimizer, hier)
+            rnd = make_hier_round(loss_fn, self.optimizer, hier,
+                                  reducer=self.reducer)
         elif algo == "kavg":
-            rnd = make_kavg_round(loss_fn, self.optimizer, hier.k2)
+            rnd = make_kavg_round(loss_fn, self.optimizer, hier.k2,
+                                  reducer=self.reducer)
         elif algo == "sync":
-            rnd = make_sync_sgd_round(loss_fn, self.optimizer)
+            rnd = make_sync_sgd_round(loss_fn, self.optimizer,
+                                      reducer=self.reducer)
         else:
             raise ValueError(algo)
         self.round_fn = jax.jit(rnd)
@@ -81,10 +89,18 @@ class Simulator:
         return jax.tree.map(
             lambda x: x.reshape(shape + x.shape[1:]), batch)
 
+    def payload_bytes_per_reduction(self) -> int:
+        """Analytic per-learner wire bytes of one reduction under the
+        configured reducer (dense fp32 for "mean")."""
+        params1 = jax.eval_shape(self.init_fn,
+                                 jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return self.reducer.payload_bytes(params1)
+
     def run(self, n_rounds: int, key=None) -> SimResult:
         key = self.key if key is None else key
         k_init, key = jax.random.split(key)
-        state = init_state(self.topo, self.init_fn, self.optimizer, k_init)
+        state = init_state(self.topo, self.init_fn, self.optimizer, k_init,
+                           reducer=self.reducer)
         losses, accs, elosses, eaccs, gsq = [], [], [], [], []
         for r in range(n_rounds):
             key, kb = jax.random.split(key)
@@ -113,6 +129,7 @@ def run_algo_comparison(loss_fn, init_fn, sample_batch, eval_batch, *,
                         topo=spec["topo"], hier=spec["hier"],
                         optimizer=spec.get("optimizer"),
                         algo=spec.get("algo", "hier"),
+                        reducer=spec.get("reducer"),
                         per_learner_batch=per_learner_batch,
                         eval_batch=eval_batch, seed=seed)
         out[name] = sim.run(n_rounds)

@@ -33,6 +33,17 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
               interpret=(impl == "pallas_interpret"))
 
 
+def topk_compress(x, k: int, *, impl: str = "xla",
+                  block_n: int = 1024) -> Tuple[jax.Array, jax.Array]:
+    """Dispatchable magnitude top-k selection: x [rows, n] ->
+    (values [rows, k], indices [rows, k] int32, ascending per row)."""
+    if impl == "xla":
+        return kref.topk_compress_ref(x, k)
+    from repro.kernels.topk_compress import topk_compress as tk
+    return tk(x, k, block_n=block_n,
+              interpret=(impl == "pallas_interpret"))
+
+
 def rwkv6_wkv(r, k, v, w, u, state, *, impl: str = "xla",
               block_t: int = 64) -> Tuple[jax.Array, jax.Array]:
     """Dispatchable WKV6: r/k/v/w [B,S,H,D], u [H,D], state [B,H,D,D]."""

@@ -42,6 +42,20 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, s, hq, d).astype(q.dtype)
 
 
+def topk_compress_ref(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-row magnitude top-k selection (the sparse-reducer hot path).
+
+    x [rows, n] -> (values [rows, k] in x.dtype, indices [rows, k] int32).
+    Indices are ascending per row (index order, not magnitude order), so the
+    Pallas kernel's threshold+compaction pass produces identical output when
+    the k-th magnitude is untied.
+    """
+    _, idx = jax.lax.top_k(jnp.abs(x.astype(jnp.float32)), k)
+    idx = jnp.sort(idx, axis=-1)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
 def rwkv6_wkv_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
                   u: jax.Array, state: jax.Array
                   ) -> Tuple[jax.Array, jax.Array]:

@@ -1,0 +1,127 @@
+"""Fused top-k compression (flatten -> abs -> threshold -> gather) as a
+Pallas TPU kernel — the sparse reducer's hot path (comm/sparse.py).
+
+TPU-native design (no sort): an exact top-k via
+  1. a 31-step binary search for the k-th magnitude in the fp32 *bit
+     domain* — non-negative IEEE floats compare identically as int32, so
+     building the threshold bit-by-bit distinguishes every representable
+     magnitude (scale-free: a 1e8 outlier next to 1e-3 values costs no
+     precision, unlike value-domain bisection) — pure VPU reductions over
+     the row held in VMEM, then
+  2. compaction of the selected coordinates in index order: a cumulative
+     sum assigns each kept element its output slot and a chunked one-hot
+     matmul ([block_n, k] per chunk, MXU-friendly) scatters values and
+     indices into the [k]-wide outputs — no dynamic scatter needed.
+
+Grid = (rows,): one program per learner-row, whole row in VMEM (the
+per-leaf rows Hier-AVG produces are far below the ~16 MB VMEM budget; the
+chunking bounds the one-hot to block_n*k words).  Ties at the k-th
+magnitude resolve to the lowest indices, matching kernels/ref.py's oracle.
+
+Caveat: the selection is bit-exact, but subnormal *values* (< ~1.2e-38)
+flush to zero through the dot-product compaction (FTZ on the MXU and in the
+XLA dot) — irrelevant for the EF reducer, whose residual re-accumulates
+anything dropped.
+
+Validated against ref.topk_compress_ref with interpret=True on CPU
+(tests/test_kernels.py), including a heavy-tailed row (1e8 outlier next to
+~1.0 values) that defeats value-domain bisection.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import compiler_params
+
+_BISECT_ITERS = 31   # one per magnitude bit of a non-negative fp32
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, n: int, k: int, block_n: int,
+                 n_pad: int):
+    x = x_ref[0, :].astype(jnp.float32)                     # [n_pad]
+    gidx = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)[0]
+    # |x| >= 0 has sign bit 0, so its int32 bit pattern orders identically;
+    # padding gets -1 (int32), below every candidate threshold
+    bits = jnp.where(gidx < n,
+                     jax.lax.bitcast_convert_type(jnp.abs(x), jnp.int32),
+                     jnp.int32(-1))
+
+    # -- exact k-th magnitude: build the largest threshold t (bit by bit,
+    # high to low) such that count(bits >= t) >= k ----------------------- #
+    def refine(i, t):
+        cand = t | (1 << (30 - i))
+        ok = jnp.sum(jnp.where(bits >= cand, 1, 0)) >= k
+        return jnp.where(ok, cand, t)
+
+    t = jax.lax.fori_loop(0, _BISECT_ITERS, refine, jnp.int32(0))
+
+    # -- tie-exact selection: everything strictly above the k-th magnitude,
+    # remaining slots filled with tied elements in index order — lax.top_k's
+    # stable tie-break, so oracle and kernel agree even on tied (e.g. bf16)
+    # magnitudes ---------------------------------------------------------- #
+    gt = bits > t
+    eq = bits == t
+    fill = k - jnp.sum(gt.astype(jnp.int32))
+    keep = gt | (eq & (jnp.cumsum(eq.astype(jnp.int32)) <= fill))
+    slot = jnp.cumsum(keep.astype(jnp.int32)) - 1           # output position
+
+    vals_ref[...] = jnp.zeros_like(vals_ref)
+    idx_ref[...] = jnp.zeros_like(idx_ref)
+    kcol = jax.lax.broadcasted_iota(jnp.int32, (block_n, k), 1)
+
+    def chunk(c, _):
+        def sl(v):
+            return jax.lax.dynamic_slice_in_dim(v, c * block_n, block_n)
+
+        # HIGHEST keeps the MXU passes in full fp32 — default precision
+        # would truncate the float-encoded indices (and values) to bf16's
+        # 8 mantissa bits on hardware
+        onehot = jnp.where(
+            (sl(slot)[:, None] == kcol) & sl(keep)[:, None], 1.0, 0.0)
+        vals_ref[0, :] += jax.lax.dot_general(
+            sl(x)[None, :], onehot, (((1,), (0,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32)[0]
+        idx_ref[0, :] += jax.lax.dot_general(
+            sl(gidx).astype(jnp.float32)[None, :], onehot,
+            (((1,), (0,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32)[0]
+        return 0
+
+    jax.lax.fori_loop(0, n_pad // block_n, chunk, 0)
+
+
+def topk_compress(x: jax.Array, k: int, *, block_n: int = 1024,
+                  interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x [rows, n] -> (values [rows, k] in x.dtype, indices [rows, k] int32,
+    ascending per row).  Matches ref.topk_compress_ref exactly (ties at the
+    k-th magnitude break to the lowest indices, like lax.top_k)."""
+    rows, n = x.shape
+    assert 1 <= k <= n, (k, n)
+    assert n < 2 ** 24, "index compaction accumulates in fp32"
+    block_n = min(block_n, n)
+    n_pad = -(-n // block_n) * block_n
+    if n_pad != n:
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+
+    kernel = functools.partial(_topk_kernel, n=n, k=k, block_n=block_n,
+                               n_pad=n_pad)
+    vals, idxf = pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, n_pad), lambda r: (r, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda r: (r, 0)),
+                   pl.BlockSpec((1, k), lambda r: (r, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, k), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, k), jnp.float32)],
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(x)
+    return vals.astype(x.dtype), idxf.astype(jnp.int32)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.comm import EFState, get_reducer
 from repro.configs.base import (ArchConfig, HierAvgParams, InputShape,
                                 INPUT_SHAPES, ParallelLayout)
 from repro.core.hier_avg import init_state, make_hier_round
@@ -71,10 +72,12 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
 
     bundle = build(cfg, param_dtype=param_dtype, remat=remat)
     optimizer = sgd(0.1)          # paper: plain SGD, step-decayed lr
+    reducer = get_reducer(hier.reducer)
 
     # ---- state structure without allocation ----
     state_struct = jax.eval_shape(
-        lambda k: init_state(topo, bundle.init, optimizer, k),
+        lambda k: init_state(topo, bundle.init, optimizer, k,
+                             reducer=reducer),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
     rules = PartitionRules()
     pspecs = param_pspecs(state_struct.params, mesh, stacked_learners=True,
@@ -93,7 +96,15 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
             else opt_specs
     except Exception:
         pass
-    state_specs = state_struct.__class__(pspecs, opt_specs, P())
+    # reducer comm state: EF ref/err mirror the params tree exactly (same
+    # shapes, fp32 err), so they reuse the params' specs — learner axes AND
+    # trailing fsdp/tp shards; the PRNG key stays replicated
+    if isinstance(state_struct.comm_state, EFState):
+        comm_specs = EFState(ref=pspecs, err=pspecs, key=P())
+    else:
+        comm_specs = jax.tree.map(lambda leaf: P(),
+                                  state_struct.comm_state)
+    state_specs = state_struct.__class__(pspecs, opt_specs, P(), comm_specs)
     state_shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s), state_specs,
         is_leaf=lambda x: isinstance(x, P))

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
+from repro.comm import get_reducer
 from repro.configs import HierAvgParams, get_config
 from repro.core import (HierTopology, init_state, make_hier_round,
                         unstack_first)
@@ -39,6 +40,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--reducer", default="mean",
+                    help="reduction payload spec (comm/): mean | "
+                         "cast[:dtype] | topk[:ratio] | randk[:ratio] | "
+                         "qint8[:block]")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -49,7 +54,8 @@ def main() -> None:
     assert args.learners % args.s == 0
     topo = HierTopology(pods=1, groups=args.learners // args.s,
                         local=args.s)
-    hier = HierAvgParams(k1=args.k1, k2=args.k2)
+    hier = HierAvgParams(k1=args.k1, k2=args.k2, reducer=args.reducer)
+    reducer = get_reducer(hier.reducer)
     bundle = build(cfg)
     optimizer = sgd(step_decay_lr(args.lr, [args.rounds * args.k2 * 3 // 4],
                                   [0.1]))
@@ -62,10 +68,10 @@ def main() -> None:
     loader = HierDataLoader(sample, topo=topo, hier=hier,
                             per_learner_batch=args.batch, seed=args.seed)
     round_fn = jax.jit(make_hier_round(bundle.loss_fn, optimizer, hier))
-    state = init_state(topo, bundle.init, optimizer, key)
+    state = init_state(topo, bundle.init, optimizer, key, reducer=reducer)
 
     print(f"Hier-AVG: {topo.describe()}  K1={hier.k1} K2={hier.k2} "
-          f"arch={cfg.name}")
+          f"reducer={reducer.describe()} arch={cfg.name}")
     for r in range(args.rounds):
         t0 = time.time()
         state, metrics = round_fn(state, loader.next_round())

@@ -22,6 +22,7 @@ def _leaves_equal_across_learners(params, topo):
     return True
 
 
+@pytest.mark.slow
 def test_k1_eq_k2_equals_kavg(cls_task):
     """Hier-AVG with K1 == K2 reproduces K-AVG exactly (same data)."""
     topo = HierTopology(1, 2, 4)
@@ -35,6 +36,7 @@ def test_k1_eq_k2_equals_kavg(cls_task):
     np.testing.assert_allclose(r1.eval_losses, r2.eval_losses, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_s1_local_averaging_is_identity(cls_task):
     """S == 1: local reductions are no-ops, so hier == kavg."""
     topo = HierTopology(1, 8, 1)
@@ -131,9 +133,10 @@ def test_step_api_matches_round_api(cls_task):
                                    atol=1e-5, rtol=1e-5)
 
 
-def test_microbatch_grad_accumulation_equivalence(cls_task):
-    """microbatch=2 gives the same update as microbatch=1 (linear loss in
-    batch -> identical mean gradient)."""
+@pytest.mark.parametrize("microbatch", [2, 4])
+def test_microbatch_grad_accumulation_equivalence(cls_task, microbatch):
+    """microbatch=2/4 gives the same update as microbatch=1 (linear loss in
+    batch -> identical mean gradient) to fp32 tolerance."""
     topo = HierTopology(1, 1, 2)
     opt = sgd(0.05)
     key = jax.random.PRNGKey(5)
@@ -143,7 +146,8 @@ def test_microbatch_grad_accumulation_equivalence(cls_task):
     shaped = jax.tree.map(
         lambda x: x.reshape(topo.shape + (8,) + x.shape[1:]), batch)
     st1 = jax.jit(make_sgd_step(cls_task["loss_fn"], opt, microbatch=1))
-    st2 = jax.jit(make_sgd_step(cls_task["loss_fn"], opt, microbatch=2))
+    st2 = jax.jit(make_sgd_step(cls_task["loss_fn"], opt,
+                                microbatch=microbatch))
     s1, _ = st1(s1, shaped)
     s2, _ = st2(s2, shaped)
     for la, lb in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
@@ -164,9 +168,9 @@ def test_hier_avg_converges(cls_task):
 
 
 def test_bf16_averaging_converges(cls_task):
-    """Beyond-paper: reductions computed in bf16 (half all-reduce payload)
-    track fp32 averaging closely on a real task."""
-    import jax.numpy as jnp
+    """Beyond-paper: reductions with a bf16 payload (the "cast" reducer,
+    ex-``avg_dtype``; half all-reduce payload) track fp32 averaging closely
+    on a real task."""
     from repro.core.hier_avg import init_state
     topo = HierTopology(1, 2, 4)
     h = HierAvgParams(k1=2, k2=4)
@@ -179,7 +183,7 @@ def test_bf16_averaging_converges(cls_task):
                             + x.shape[1:]), batch)
     r32 = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
     r16 = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h,
-                                  avg_dtype=jnp.bfloat16))
+                                  reducer="cast:bfloat16"))
     sa = init_state(topo, cls_task["init_fn"], opt, key)
     sb = init_state(topo, cls_task["init_fn"], opt, key)
     for _ in range(3):

@@ -11,6 +11,8 @@ from repro.configs import get_config
 from repro.models import build
 from repro.models.common import (apply_rope, mrope_cos_sin, rope_cos_sin,
                                  text_positions)
+
+pytestmark = pytest.mark.slow
 from repro.models.moe import moe_apply, moe_init
 from repro.models.stubs import mrope_positions
 

@@ -10,6 +10,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCHS, get_config
+
+pytestmark = pytest.mark.slow
 from repro.models import build
 from repro.models.common import count_params, text_positions
 from repro.models.stubs import make_train_batch

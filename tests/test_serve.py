@@ -1,11 +1,14 @@
 """Serving engine behaviour."""
 import jax
+import pytest
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import build
 from repro.serve import GenerationConfig, ServeEngine, describe_cache
+
+pytestmark = pytest.mark.slow
 
 
 def _engine(arch="rwkv6-1.6b", max_new=6, temperature=0.0):

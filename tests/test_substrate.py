@@ -141,13 +141,22 @@ def test_spec_leading_axes_stacked():
     assert tuple(s) == (None, "fsdp", "model")
 
 
-def test_safe_pspec_drops_nondivisible():
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: ((name, size), ...) pairs vs the
+    newer (sizes, names) signature."""
     from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((1, 1), ("data", "model"))
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(sizes), tuple(names))
+
+
+def test_safe_pspec_drops_nondivisible():
+    mesh = _abstract_mesh((1, 1), ("data", "model"))
     # size-1 axes divide everything
     s = safe_pspec(P("data", "model"), (25, 7), mesh)
     assert tuple(s) == ("data", "model")
-    mesh4 = AbstractMesh((2, 2), ("data", "model"))
+    mesh4 = _abstract_mesh((2, 2), ("data", "model"))
     s = safe_pspec(P("data", "model"), (25, 8), mesh4)
     assert tuple(s) == (None, "model")
     # tuple axes multiply

@@ -10,6 +10,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+
+pytestmark = pytest.mark.slow
 from repro.configs.base import HierAvgParams
 from repro.core import HierTopology, Simulator, unstack_first
 from repro.data.synthetic import make_markov_task, markov_lm_batch
