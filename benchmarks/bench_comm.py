@@ -1,27 +1,37 @@
 """Communication accounting — the paper's motivation made quantitative.
 
-For every assigned architecture: reduction seconds per K2-step cycle for
-Hier-AVG vs K-AVG under the ring model (theory.CommModel, ICI vs DCI
-bandwidths), plus — when the dry-run artifacts exist — the measured
-per-device collective link-bytes of the compiled hier_round.
+For every assigned architecture:
+  * the legacy hier-vs-K-AVG headline (reduction seconds per K2-step cycle
+    under the ring model, ICI vs DCI bandwidths);
+  * a per-level cost breakdown of a 3-level ICI/DCI-aligned ReductionPlan
+    (``local@4:cast:bfloat16 / pod@8:mean / global@16:topk:0.05``) — each
+    level costed over its own link tier and its own *compressed* payload
+    (theory.plan_comm_per_round);
+  * when the dry-run artifacts exist, the measured per-device collective
+    link-bytes of the compiled hier_round.
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 from typing import List
 
 from repro.configs import ALL_ARCHS, get_config
-from repro.core.theory import CommModel, comm_per_k2_steps
+from repro.core.plan import ReductionPlan
+from repro.core.theory import (CommModel, comm_per_k2_steps, param_template,
+                               plan_comm_per_round)
+from repro.core.topology import HierTopology
 from benchmarks.common import Row
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
 
+PLAN_SPEC = "local@4:cast:bfloat16/pod@8:mean/global@16:topk:0.05"
+
 
 def run() -> List[Row]:
     cm = CommModel()
+    plan = ReductionPlan.parse(PLAN_SPEC)
     rows: List[Row] = []
     for arch in ALL_ARCHS:
         cfg = get_config(arch)
@@ -31,7 +41,6 @@ def run() -> List[Row]:
         S = max(lay.local, 2)
         k1, k2 = 4, 8
         loc, glo = comm_per_k2_steps(model_bytes, k1, k2, P, S, cm)
-        _, glo_kavg = comm_per_k2_steps(model_bytes, k2, k2, P, 1, cm)
         hier_ms = (loc + glo) / k2 * 1e3
         kavg_k1 = k1  # K-AVG syncing as often as hier's local cadence
         _, glo_k1 = comm_per_k2_steps(model_bytes, kavg_k1, kavg_k1, P, 1,
@@ -42,10 +51,27 @@ def run() -> List[Row]:
                    f"saving={1 - hier_ms / max(kavg_ms, 1e-12):.1%}")
         f = os.path.join(DRYRUN_DIR, f"{arch}__train_4k__1pod.json")
         if os.path.exists(f):
-            rec = json.load(open(f))
+            with open(f) as fh:
+                rec = json.load(fh)
             hlo = rec.get("roofline_hlo_per_body", rec.get("roofline"))
             lb = hlo["collective_link_bytes"]
             steps = hlo.get("steps", 1)
             derived += f" measured_link_MB_per_step={lb / steps / 2**20:.0f}"
         rows.append((f"comm/{arch}", 0.0, derived))
+
+        # per-level breakdown of the 3-level plan on the 2-pod topology;
+        # payloads vs the dense fp32 mean (bench_compression's baseline)
+        topo = HierTopology(pods=2, groups=lay.groups, local=lay.local)
+        template = param_template(cfg.param_count(), dtype="float32")
+        dense = cfg.param_count() * 4
+        for lc in plan_comm_per_round(plan, topo, template, cm):
+            ms_per_step = lc.seconds_per_round / plan.total_period * 1e3
+            tier = "dci" if lc.bandwidth == cm.slow_bw else "ici"
+            rows.append((
+                f"comm/{arch}/plan/{lc.name}", 0.0,
+                f"period={lc.period} n={lc.participants} "
+                f"payload_MB={lc.payload_bytes / 2**20:.1f} "
+                f"compress_x={dense / max(lc.payload_bytes, 1):.1f} "
+                f"count_per_round={lc.count_per_round} tier={tier} "
+                f"ms_per_step={ms_per_step:.3f}"))
     return rows

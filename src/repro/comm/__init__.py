@@ -8,6 +8,7 @@ Pick a reducer by spec string (``HierAvgParams.reducer`` / ``--reducer``):
     "topk[:ratio]"        magnitude top-k of the delta, error feedback
     "randk[:ratio]"       shared-support random-k, error feedback
     "qint8[:block]"       per-block int8 scale quantization
+    "powersgd[:rank]"     PowerSGD low-rank factors, EF + warm-started Q
 
 e.g. ``get_reducer("topk:0.05")`` transmits 5% of coordinates.
 """
@@ -16,8 +17,9 @@ from repro.comm.reducer import (CastReducer, MeanReducer,  # noqa: F401
 from repro.comm.sparse import (EFState, RandKReducer,  # noqa: F401
                                TopKReducer)
 from repro.comm.quant import QInt8Reducer  # noqa: F401
+from repro.comm.lowrank import LowRankState, PowerSGDReducer  # noqa: F401
 
-REDUCER_NAMES = ("mean", "cast", "topk", "randk", "qint8")
+REDUCER_NAMES = ("mean", "cast", "topk", "randk", "qint8", "powersgd")
 
 
 def get_reducer(spec, **kw) -> Reducer:
@@ -40,5 +42,7 @@ def get_reducer(spec, **kw) -> Reducer:
         return RandKReducer(float(arg or 0.1), **kw)
     if name == "qint8":
         return QInt8Reducer(int(arg or 256))
+    if name == "powersgd":
+        return PowerSGDReducer(int(arg or 2))
     raise ValueError(
         f"unknown reducer spec {spec!r}; known: {REDUCER_NAMES}")

@@ -53,15 +53,35 @@ class ParallelLayout:
 
 @dataclass(frozen=True)
 class HierAvgParams:
-    """The paper's algorithm knobs (Algorithm 1)."""
+    """The paper's algorithm knobs (Algorithm 1), generalized to an N-level
+    reduction hierarchy.
 
-    k1: int = 4          # local-averaging interval (local SGD steps)
-    k2: int = 8          # global-averaging interval; beta = k2 // k1
+    ``plan`` is a ReductionPlan spec string (core/plan.py), e.g.
+    ``"local@4:cast:bfloat16/pod@8/global@16:topk:0.05"``.  When set it
+    wins over ``k1``/``k2``/``reducer`` (which are back-filled from the
+    plan: ``k1`` = innermost period, ``k2`` = outermost); when unset, the
+    legacy ``(k1, k2, reducer)`` trio builds the paper's 2-level plan
+    bit-identically.
+    """
+
+    k1: int = 4          # innermost (local) averaging interval (SGD steps)
+    k2: int = 8          # outermost (global) averaging interval
     # S (cluster size) comes from ParallelLayout.local / topology, and P from
     # the topology's total learner count.
     reducer: str = "mean"  # reduction payload spec, e.g. "topk:0.1" (comm/)
+    plan: Optional[str] = None  # N-level plan spec; wins over k1/k2/reducer
 
     def __post_init__(self):
+        if self.plan is not None:
+            # lazy import: core.plan owns parsing; this validates level
+            # names, reducer specs, and period/axes nesting at build time
+            from repro.core.plan import ReductionPlan
+            p = ReductionPlan.parse(self.plan)
+            # back-fill the legacy knobs so k1/k2-reading code (analytic
+            # model, logging, schedules) stays meaningful
+            object.__setattr__(self, "k1", p.levels[0].period)
+            object.__setattr__(self, "k2", p.total_period)
+            return
         if self.k1 < 1 or self.k2 < self.k1:
             raise ValueError(f"need 1 <= K1 <= K2, got K1={self.k1} K2={self.k2}")
         if self.k2 % self.k1 != 0:
@@ -74,6 +94,25 @@ class HierAvgParams:
     @property
     def beta(self) -> int:
         return self.k2 // self.k1
+
+    @property
+    def resolved_plan(self):
+        """The ReductionPlan this config describes (parsed fresh)."""
+        from repro.core.plan import ReductionPlan
+        if self.plan is not None:
+            return ReductionPlan.parse(self.plan)
+        return ReductionPlan.from_k1_k2(self.k1, self.k2, self.reducer)
+
+    @property
+    def batch_dims(self) -> Tuple[int, ...]:
+        """Leading round-batch dims (outermost ratio first); the 2-level
+        plan gives the familiar (beta, k1)."""
+        return self.resolved_plan.batch_dims
+
+    @property
+    def steps_per_round(self) -> int:
+        """SGD steps per round == the outermost period (== k2)."""
+        return self.k2
 
 
 @dataclass(frozen=True)

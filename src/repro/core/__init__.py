@@ -2,10 +2,13 @@
 from repro.core.topology import (HierTopology, global_average,  # noqa: F401
                                  local_average, pod_average, stack_like,
                                  unstack_first)
+from repro.core.plan import (ReductionLevel, ReductionPlan,  # noqa: F401
+                             resolve_plan)
 from repro.core.hier_avg import (TrainState, init_state,  # noqa: F401
                                  make_hier_round, make_hier_step,
                                  make_sgd_step, stacked_grad_fn)
 from repro.core.baselines import (make_kavg_round,  # noqa: F401
                                   make_sync_sgd_round)
-from repro.core.schedules import AdaptiveK2, thm31_gamma, thm31_k2  # noqa: F401
+from repro.core.schedules import (AdaptiveK2, AdaptivePlan,  # noqa: F401
+                                  thm31_gamma, thm31_k2)
 from repro.core.simulator import SimResult, Simulator  # noqa: F401

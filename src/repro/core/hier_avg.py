@@ -1,35 +1,39 @@
-"""Hier-AVG (Algorithm 1) as a composable JAX trainer.
+"""Hier-AVG (Algorithm 1) as a composable JAX trainer, generalized to an
+N-level :class:`~repro.core.plan.ReductionPlan`.
 
-The whole K2-step cycle ("round") is one jitted program built from nested
-``lax.scan``s, exactly mirroring Algorithm 1:
+A round is one jitted program built as a recursive nest of ``lax.scan``s —
+one scan per plan level, innermost first:
 
-    for b in 0..beta-1:          # beta = K2 / K1
-        for k in 1..K1:          #   local SGD steps
-            w_j <- w_j - gamma/B sum grad F(w_j; xi)
-        w_j <- mean over cluster (S learners)        # local reduction
-    w~ <- mean over all P learners                   # global reduction
+    level 0:  p_1 SGD steps, then the level-0 reduction
+    level i:  (p_{i+1}/p_i) runs of level i-1, then the level-i reduction
+
+The paper's Algorithm 1 is the 2-level plan ``local@K1 / global@K2``
+(``beta = K2/K1`` runs of K1 local steps + cluster averaging, then one
+global averaging), which legacy ``HierAvgParams(k1, k2)`` builds
+bit-identically.  A 3-level ICI/DCI-aligned plan adds a ``pod`` rung.
 
 Parameters/optimizer state live in the stacked-learner layout
-[pods, G, S, *shape]; per-learner gradients come from one ``jax.grad`` of the
-summed per-learner losses through a triple ``vmap``.  The two reductions are
-``jnp.mean``s over the stacked axes (see core/topology.py) which GSPMD turns
-into grouped all-reduces over the matching mesh axes.
+[pods, G, S, *shape]; per-learner gradients come from one ``jax.grad`` of
+the summed per-learner losses through a triple ``vmap``.  Each level's
+reduction is a ``jnp.mean`` over that level's stacked axes (see
+core/topology.py) which GSPMD turns into grouped all-reduces over the
+matching mesh axes, optionally compressed per level by a comm/ Reducer.
 
-The same code runs on a single CPU device (simulator / tests — no mesh) and
-on the 512-chip multi-pod mesh (launch/dryrun.py supplies shardings).
+The same code runs on a single CPU device (simulator / tests — no mesh)
+and on the 512-chip multi-pod mesh (launch/dryrun.py supplies shardings).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.comm import Reducer, get_reducer, reduce_with
+from repro.comm import Reducer, reduce_with
 from repro.configs.base import HierAvgParams
-from repro.core.topology import (HierTopology, global_average, local_average,
-                                 stack_like)
+from repro.core.plan import (PlanLike, ReductionLevel, ReductionPlan,
+                             init_comm_state, resolve_plan)
+from repro.core.topology import HierTopology, average_over, stack_like
 from repro.optim import Optimizer
 
 
@@ -37,20 +41,32 @@ class TrainState(NamedTuple):
     params: Any          # leaves [pods, G, S, *shape]
     opt_state: Any       # same stacking
     step: jax.Array      # scalar int32 — local SGD steps taken
-    comm_state: Any = () # reducer carry (comm/): EF residuals etc.
+    comm_state: Any = () # per-level reducer carry (comm/), keyed by level
+                         # name; () when no level is stateful
 
 
 def init_state(topo: HierTopology, init_fn, optimizer: Optimizer, key,
-               reducer: Optional[Reducer] = None) -> TrainState:
+               reducer: Optional[Reducer] = None,
+               plan: PlanLike = None) -> TrainState:
     """All learners start from the same w_1 (paper's initialization).
 
-    ``reducer`` must match the one the round/step function was built with
-    (stateful reducers carry per-learner state in ``comm_state``).
+    ``plan`` (or legacy ``reducer``) must match what the round/step
+    function was built with: stateful reducers carry per-level state in
+    ``comm_state`` keyed by level name.  Passing only ``reducer`` builds
+    the default 2-level (local/global) state for it.
     """
     params1 = init_fn(key)
     params = stack_like(topo, params1)
     opt_state = optimizer.init(params)
-    comm_state = reducer.init_state(params) if reducer is not None else ()
+    if plan is not None:
+        p = plan if isinstance(plan, ReductionPlan) \
+            else ReductionPlan.parse(plan)
+        comm_state = init_comm_state(p, params)
+    elif reducer is not None:
+        comm_state = init_comm_state(
+            ReductionPlan.from_k1_k2(1, 1, reducer), params)
+    else:
+        comm_state = ()
     return TrainState(params, opt_state, jnp.zeros((), jnp.int32),
                       comm_state)
 
@@ -125,13 +141,29 @@ def make_sgd_step(loss_fn: Callable, optimizer: Optimizer,
     return step
 
 
-def resolve_reducer(hier: HierAvgParams,
-                    reducer: Optional[Any] = None) -> Reducer:
-    """An explicit ``reducer`` (spec string or instance) wins; otherwise the
-    config's ``hier.reducer`` spec decides (default "mean")."""
-    if reducer is not None:
-        return get_reducer(reducer)
-    return get_reducer(getattr(hier, "reducer", "mean"))
+def _make_reduce(constraint_fn, sync_opt_state):
+    """reduce(level, state) -> state after one compressed reduction at
+    that level, touching only that level's comm_state entry."""
+
+    def reduce(level: ReductionLevel, state: TrainState) -> TrainState:
+        avg_fn = lambda tree, cf=None: average_over(  # noqa: E731
+            tree, level.axes, cf)
+        if level.reducer.stateful:
+            params, lvl_cs = reduce_with(
+                level.reducer, avg_fn, state.params,
+                state.comm_state[level.name], constraint_fn)
+            comm_state = dict(state.comm_state)
+            comm_state[level.name] = lvl_cs
+        else:
+            params, _ = reduce_with(level.reducer, avg_fn, state.params,
+                                    (), constraint_fn)
+            comm_state = state.comm_state
+        if sync_opt_state:
+            state = state._replace(
+                opt_state=avg_fn(state.opt_state, constraint_fn))
+        return state._replace(params=params, comm_state=comm_state)
+
+    return reduce
 
 
 def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
@@ -141,47 +173,52 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
                     constraint_fn: Optional[Callable] = None,
                     grad_postprocess: Optional[Callable] = None,
                     microbatch: int = 1,
-                    reducer: Optional[Any] = None):
-    """Build the jitted Hier-AVG round.
+                    reducer: Optional[Any] = None,
+                    plan: PlanLike = None):
+    """Build the jitted Hier-AVG round for an N-level reduction plan.
 
     round(state, round_batch) -> (state, metrics); round_batch leaves are
-    shaped [beta, K1, pods, G, S, *per_learner_batch].
+    shaped [*hier.batch_dims, pods, G, S, *per_learner_batch] — for the
+    legacy 2-level plan that is the familiar [beta, K1, ...].
 
-    ``skip_local=True`` turns the round into K-AVG with K = K2 (baseline).
+    ``plan`` — a ReductionPlan, a spec string
+    ("local@4:cast:bfloat16/pod@8/global@16:topk:0.05"), or None to use
+    ``hier.plan`` / the legacy 2-level plan from ``hier.k1``/``hier.k2``.
+
+    ``skip_local=True`` skips every reduction except the outermost (for
+    the 2-level plan this turns the round into K-AVG with K = K2).
     ``sync_opt_state`` additionally averages optimizer state at each
     reduction (beyond-paper option; default False keeps momentum local,
     matching the paper's parameter-only averaging).
 
-    ``reducer`` (comm/): how each reduction's payload is compressed — a
-    spec string ("mean", "cast:bfloat16", "topk:0.1", ...), a Reducer
-    instance, or None to use ``hier.reducer``.  Parameters go through the
-    reducer; optimizer state (when ``sync_opt_state``) is always dense mean.
-    Stateful reducers carry ``TrainState.comm_state`` — build the initial
-    state with ``init_state(..., reducer=...)``.
+    ``reducer`` (comm/): legacy single-reducer override — replaces the
+    reducer of EVERY level.  Per-level reducers come from the plan spec.
+    Stateful reducers carry ``TrainState.comm_state`` keyed by level name —
+    build the initial state with ``init_state(..., plan=...)``.
     """
     sgd_step = make_sgd_step(loss_fn, optimizer, grad_postprocess,
                              microbatch=microbatch)
-    red = resolve_reducer(hier, reducer)
+    p = resolve_plan(hier, reducer, plan)
+    _reduce = _make_reduce(constraint_fn, sync_opt_state)
 
-    def _reduce(avg_fn, state: TrainState) -> TrainState:
-        params, comm_state = reduce_with(red, avg_fn, state.params,
-                                         state.comm_state, constraint_fn)
-        if sync_opt_state:
-            state = state._replace(
-                opt_state=avg_fn(state.opt_state, constraint_fn))
-        return state._replace(params=params, comm_state=comm_state)
+    def make_phase(inner, level: ReductionLevel, skipped: bool):
+        """scan ``inner`` over this level's leading batch dim, then apply
+        this level's reduction."""
+        def phase(state: TrainState, batches):
+            state, metrics = jax.lax.scan(inner, state, batches)
+            if not skipped:
+                state = _reduce(level, state)
+            return state, metrics
+        return phase
 
-    def local_phase(state: TrainState, batches):
-        """K1 SGD steps then one local reduction."""
-        state, metrics = jax.lax.scan(sgd_step, state, batches)
-        if not skip_local:
-            state = _reduce(local_average, state)
-        return state, metrics
+    phase = sgd_step
+    last = len(p.levels) - 1
+    for i, level in enumerate(p.levels):
+        phase = make_phase(phase, level, skip_local and i < last)
 
     def round_fn(state: TrainState, round_batch):
-        state, metrics = jax.lax.scan(local_phase, state, round_batch)
-        state = _reduce(global_average, state)
-        # metrics leaves: [beta, K1, pods, G, S] -> scalar means
+        state, metrics = phase(state, round_batch)
+        # metrics leaves: [*batch_dims, pods, G, S] -> scalar means
         metrics = jax.tree.map(lambda m: m.mean(), metrics)
         return state, metrics
 
@@ -196,43 +233,53 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
                    hier: HierAvgParams, *,
                    skip_local: bool = False,
                    constraint_fn: Optional[Callable] = None,
-                   reducer: Optional[Any] = None):
-    """Single-step variant: applies local/global averaging via masking on the
-    step counter.  Semantics identical to the round API; useful when K1/K2
-    change adaptively between rounds.
+                   reducer: Optional[Any] = None,
+                   plan: PlanLike = None):
+    """Single-step variant: per-level counter masking on the step counter.
 
-    Reducers apply here too (compress runs every step; the result and any
-    carried comm state are masked in only on reduction steps).  The K2-step
-    equivalence with ``make_hier_round`` is exact for the dense "mean"
-    reducer (tests/test_hier_avg.py::test_step_api_matches_round_api); for
-    compressed reducers the round API fuses the final local+global
-    reductions while the step API applies only the global one, so the two
-    trajectories differ by the compression of an already-averaged delta.
+    Level i fires when ``t % period_i == 0`` and the next level does NOT
+    fire (an outer reduction subsumes all inner ones at the same step);
+    the outermost level fires whenever its period divides t.  Semantics
+    identical to the round API; useful when periods change adaptively
+    between rounds (core/schedules.py AdaptivePlan).
+
+    Reducers apply here too (compress runs every step; the result and the
+    level's comm state are masked in only on that level's reduction
+    steps).  The total-period equivalence with ``make_hier_round`` is
+    exact for dense/stateless reducers
+    (tests/test_plan.py::test_step_api_matches_round_api_3level); for
+    error-feedback reducers the round API reduces inner levels at outer
+    boundaries too (subsumed in time, not in the nest), so trajectories
+    differ by the compression of an already-averaged delta.
     """
     sgd_step = make_sgd_step(loss_fn, optimizer)
-    red = resolve_reducer(hier, reducer)
+    p = resolve_plan(hier, reducer, plan)
+    last = len(p.levels) - 1
+
+    def blend(new_tree, old_tree, mask):
+        return jax.tree.map(
+            lambda a, b: jnp.where(mask, a, b), new_tree, old_tree)
 
     def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
         state, metrics = sgd_step(state, batch)
         t = state.step  # steps completed
-        do_local = jnp.logical_and((t % hier.k1) == 0,
-                                   (t % hier.k2) != 0)
-        do_global = (t % hier.k2) == 0
-
-        def blend(new_tree, old_tree, mask):
-            return jax.tree.map(
-                lambda a, p: jnp.where(mask, a, p), new_tree, old_tree)
-
         params, cs = state.params, state.comm_state
-        if not skip_local:
-            red_p, red_cs = reduce_with(red, local_average, params, cs,
-                                        constraint_fn)
-            params = blend(red_p, params, do_local)
-            cs = blend(red_cs, cs, do_local)
-        red_p, red_cs = reduce_with(red, global_average, params, cs,
-                                    constraint_fn)
-        params = blend(red_p, params, do_global)
-        cs = blend(red_cs, cs, do_global)
+        for i, level in enumerate(p.levels):
+            if skip_local and i < last:
+                continue
+            fire = (t % level.period) == 0
+            if i < last:
+                fire = jnp.logical_and(
+                    fire, (t % p.levels[i + 1].period) != 0)
+            avg_fn = (lambda lv: lambda tree, cf=None: average_over(
+                tree, lv.axes, cf))(level)
+            lvl_cs = cs[level.name] if level.reducer.stateful else ()
+            red_p, red_cs = reduce_with(level.reducer, avg_fn, params,
+                                        lvl_cs, constraint_fn)
+            params = blend(red_p, params, fire)
+            if level.reducer.stateful:
+                cs = dict(cs)
+                cs[level.name] = blend(red_cs, lvl_cs, fire)
         return state._replace(params=params, comm_state=cs), metrics
 
     return step
@@ -244,14 +291,13 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
 
 def round_batch_shape(hier: HierAvgParams, topo: HierTopology,
                       per_learner_batch: int) -> Tuple[int, ...]:
-    return (hier.beta, hier.k1) + topo.shape + (per_learner_batch,)
+    return hier.batch_dims + topo.shape + (per_learner_batch,)
 
 
 def shard_round_batch(batch, hier: HierAvgParams, topo: HierTopology):
-    """Reshape leaves [beta*K1*P*B, ...] -> [beta, K1, pods, G, S, B, ...]."""
+    """Reshape leaves [steps*P*B, ...] -> [*batch_dims, pods, G, S, B, ...]."""
     def rs(x):
-        total = hier.beta * hier.k1 * topo.n_learners
+        total = hier.steps_per_round * topo.n_learners
         b = x.shape[0] // total
-        return x.reshape((hier.beta, hier.k1) + topo.shape + (b,)
-                         + x.shape[1:])
+        return x.reshape(hier.batch_dims + topo.shape + (b,) + x.shape[1:])
     return jax.tree.map(rs, batch)

@@ -1,0 +1,233 @@
+"""N-level reduction hierarchy: the `ReductionPlan`.
+
+The paper's Algorithm 1 is the 2-level special case (cluster-local every K1
+steps, global every K2) of a general hierarchy: an ordered list of
+:class:`ReductionLevel` entries, each naming a scope (which stacked learner
+axes it averages over), a period (how many SGD steps between its
+reductions), and a reducer (what each learner puts on the wire at that
+level — see comm/).  A 3-level ICI/DCI-aligned plan looks like
+
+    local@4:cast:bfloat16 / pod@8:mean / global@16:topk:0.05
+
+i.e. average within each S-learner cluster every 4 steps with a bf16
+payload, across each pod every 8, and across all P learners every 16 with
+a 5%-topk payload.  Nesting is validated: each level's axes must contain
+the previous level's, and each period must divide the next.
+
+``ReductionPlan.from_k1_k2(k1, k2, reducer)`` builds the paper's 2-level
+plan; ``HierAvgParams`` uses it so legacy ``(k1, k2, reducer)`` configs run
+bit-identically through the plan machinery.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Tuple, Union
+
+from repro.comm import Reducer, get_reducer
+from repro.core.topology import (GLOBAL_ARRAY_AXES, LOCAL_ARRAY_AXES,
+                                 POD_ARRAY_AXES)
+
+# level name -> stacked array axes the reduction averages over
+LEVEL_AXES = {
+    "local": LOCAL_ARRAY_AXES,     # within each cluster of S learners
+    "pod": POD_ARRAY_AXES,         # all learners of one pod (ICI boundary)
+    "global": GLOBAL_ARRAY_AXES,   # all P learners (crosses DCI)
+}
+
+
+@dataclass(frozen=True, eq=False)
+class ReductionLevel:
+    """One rung of the hierarchy.
+
+    ``axes`` are stacked-learner array axes (core/topology.py);
+    ``period`` is in SGD steps; ``reducer`` is a comm/ Reducer instance.
+    """
+
+    name: str
+    axes: Tuple[int, ...]
+    period: int
+    reducer: Reducer
+
+    def describe(self) -> str:
+        return f"{self.name}@{self.period}:{self.reducer.describe()}"
+
+    def __repr__(self) -> str:
+        return f"ReductionLevel({self.describe()})"
+
+
+PlanLike = Union["ReductionPlan", str, None]
+
+
+@dataclass(frozen=True, eq=False)
+class ReductionPlan:
+    """Ordered (innermost -> outermost) reduction levels.
+
+    Invariants enforced at construction:
+      * at least one level, unique known names (local / pod / global);
+      * scopes nest: level i's axes are a superset of level i-1's;
+      * periods nest: each level's period divides the next level's.
+    """
+
+    levels: Tuple[ReductionLevel, ...]
+
+    def __post_init__(self):
+        if not self.levels:
+            raise ValueError("a ReductionPlan needs at least one level")
+        names = [lvl.name for lvl in self.levels]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate level names in plan: {names}")
+        for lvl in self.levels:
+            if lvl.name not in LEVEL_AXES:
+                raise ValueError(
+                    f"unknown level name {lvl.name!r}; "
+                    f"known: {sorted(LEVEL_AXES)}")
+            if lvl.period < 1:
+                raise ValueError(
+                    f"level {lvl.name!r} period must be >= 1, "
+                    f"got {lvl.period}")
+        for lo, hi in zip(self.levels, self.levels[1:]):
+            if not set(hi.axes) >= set(lo.axes):
+                raise ValueError(
+                    f"level {hi.name!r} axes {hi.axes} must contain "
+                    f"inner level {lo.name!r} axes {lo.axes}")
+            if hi.period % lo.period != 0:
+                raise ValueError(
+                    f"level {lo.name!r} period {lo.period} must divide "
+                    f"level {hi.name!r} period {hi.period}")
+
+    # ------------------------------------------------------------------ #
+    # construction
+    # ------------------------------------------------------------------ #
+
+    @classmethod
+    def parse(cls, spec: str) -> "ReductionPlan":
+        """``"name@period[:reducer_spec]"`` entries joined by ``/``, e.g.
+        ``"local@4:cast:bfloat16/pod@8/global@16:topk:0.05"`` (reducer
+        defaults to ``mean``)."""
+        levels = []
+        for part in str(spec).split("/"):
+            part = part.strip()
+            if "@" not in part:
+                raise ValueError(
+                    f"bad plan entry {part!r}: expected name@period"
+                    f"[:reducer_spec]")
+            name, _, rest = part.partition("@")
+            period_s, _, red_spec = rest.partition(":")
+            try:
+                period = int(period_s)
+            except ValueError:
+                raise ValueError(
+                    f"bad period {period_s!r} in plan entry {part!r}")
+            name = name.strip()
+            axes = LEVEL_AXES.get(name)
+            if axes is None:
+                raise ValueError(
+                    f"unknown level name {name!r} in plan entry {part!r}; "
+                    f"known: {sorted(LEVEL_AXES)}")
+            levels.append(ReductionLevel(
+                name=name, axes=axes, period=period,
+                reducer=get_reducer(red_spec or "mean")))
+        return cls(tuple(levels))
+
+    @classmethod
+    def from_k1_k2(cls, k1: int, k2: int, reducer="mean") -> "ReductionPlan":
+        """The paper's 2-level hierarchy (Algorithm 1): cluster-local every
+        K1 steps, global every K2, one reducer for both."""
+        red = get_reducer(reducer)
+        return cls((
+            ReductionLevel("local", LEVEL_AXES["local"], k1, red),
+            ReductionLevel("global", LEVEL_AXES["global"], k2, red),
+        ))
+
+    # ------------------------------------------------------------------ #
+    # derived shape / schedule facts
+    # ------------------------------------------------------------------ #
+
+    @property
+    def total_period(self) -> int:
+        """SGD steps per round (the outermost level's period)."""
+        return self.levels[-1].period
+
+    @property
+    def batch_dims(self) -> Tuple[int, ...]:
+        """Leading round-batch dims, outermost ratio first:
+        (p_N/p_{N-1}, ..., p_2/p_1, p_1).  2-level == (beta, K1)."""
+        dims = [self.levels[0].period]
+        for lo, hi in zip(self.levels, self.levels[1:]):
+            dims.append(hi.period // lo.period)
+        return tuple(reversed(dims))
+
+    def counts_per_round(self) -> Tuple[Tuple[str, int], ...]:
+        """(name, billable reductions per round) per level.
+
+        A reduction coinciding with an outer level's is NOT counted: for
+        dense means the outer average makes it a numeric no-op, so a
+        payload-aware schedule would skip it — the same convention as
+        ``theory.comm_per_k2_steps``.  Note the scan-nest round program
+        still *executes* inner reductions at outer boundaries (and for
+        error-feedback reducers those do update per-level EF state);
+        this method models the wire bill, not the op count.
+        """
+        N = self.total_period
+        out = []
+        for i, lvl in enumerate(self.levels):
+            n = N // lvl.period
+            if i + 1 < len(self.levels):
+                n -= N // self.levels[i + 1].period
+            out.append((lvl.name, n))
+        return tuple(out)
+
+    # ------------------------------------------------------------------ #
+    # derivation
+    # ------------------------------------------------------------------ #
+
+    def with_outer_period(self, period: int) -> "ReductionPlan":
+        """Same plan with the outermost period replaced (inner levels
+        fixed) — the AdaptivePlan knob."""
+        outer = replace(self.levels[-1], period=period)
+        return ReductionPlan(self.levels[:-1] + (outer,))
+
+    def with_reducer(self, reducer) -> "ReductionPlan":
+        """Same schedule with every level's reducer replaced (the legacy
+        single-``reducer`` override)."""
+        red = get_reducer(reducer)
+        return ReductionPlan(tuple(replace(lvl, reducer=red)
+                                   for lvl in self.levels))
+
+    def describe(self) -> str:
+        return "/".join(lvl.describe() for lvl in self.levels)
+
+    def __repr__(self) -> str:
+        return f"ReductionPlan({self.describe()})"
+
+
+def resolve_plan(hier, reducer=None, plan: PlanLike = None) -> ReductionPlan:
+    """The plan a round/step builder actually uses.
+
+    Precedence: explicit ``plan`` argument (instance or spec string), then
+    ``hier.plan``, then the legacy 2-level plan from ``hier.k1``/``hier.k2``.
+    An explicit ``reducer`` (spec or instance) overrides the reducer of
+    EVERY level — the legacy single-reducer behavior.
+    """
+    if plan is None:
+        plan = getattr(hier, "plan", None)
+    if plan is None:
+        p = ReductionPlan.from_k1_k2(
+            hier.k1, hier.k2, getattr(hier, "reducer", "mean"))
+    elif isinstance(plan, ReductionPlan):
+        p = plan
+    else:
+        p = ReductionPlan.parse(plan)
+    if reducer is not None:
+        p = p.with_reducer(reducer)
+    return p
+
+
+def init_comm_state(plan: ReductionPlan, params):
+    """Per-level reducer carry keyed by level name (stateful levels only —
+    topk error feedback at the local level must not pollute global EF).
+    All-stateless plans keep the legacy ``()`` so TrainState is unchanged
+    on the default path."""
+    state = {lvl.name: lvl.reducer.init_state(params)
+             for lvl in plan.levels if lvl.reducer.stateful}
+    return state if state else ()

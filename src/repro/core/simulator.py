@@ -14,10 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import Reducer, get_reducer
+from repro.comm import Reducer
 from repro.configs.base import HierAvgParams
 from repro.core.baselines import make_kavg_round, make_sync_sgd_round
 from repro.core.hier_avg import TrainState, init_state, make_hier_round
+from repro.core.plan import (LEVEL_AXES, ReductionLevel, ReductionPlan,
+                             resolve_plan)
 from repro.core.topology import HierTopology, unstack_first
 from repro.optim import Optimizer, sgd
 
@@ -59,18 +61,35 @@ class Simulator:
         self.B = per_learner_batch
         self.eval_batch = eval_batch
         self.key = jax.random.PRNGKey(seed)
-        # reducer spec/instance wins over hier.reducer (comm/)
-        self.reducer: Reducer = get_reducer(
-            reducer if reducer is not None else hier.reducer)
+        # the plan actually trained: hier.plan / legacy (k1,k2,reducer),
+        # with an explicit ``reducer`` spec/instance overriding every level
+        self.plan: ReductionPlan = resolve_plan(hier, reducer)
+        # outermost level's reducer == the legacy single-reducer view
+        self.reducer: Reducer = self.plan.levels[-1].reducer
+        # the round batch nest must match the round function actually
+        # built: the baselines are 2-level rounds, so an N-level hier's
+        # batch collapses to (1, steps) for them
+        legacy_dims = hier.batch_dims if len(hier.batch_dims) == 2 \
+            else (1, hier.steps_per_round)
         if algo == "hier":
             rnd = make_hier_round(loss_fn, self.optimizer, hier,
-                                  reducer=self.reducer)
+                                  reducer=reducer)
+            self._batch_dims = self.plan.batch_dims
+            self._init_plan = self.plan
         elif algo == "kavg":
             rnd = make_kavg_round(loss_fn, self.optimizer, hier.k2,
                                   reducer=self.reducer)
+            self._batch_dims = legacy_dims
+            # the baselines only ever reduce globally (skip_local), so a
+            # 1-level plan avoids carrying an unused "local" EF state
+            self._init_plan = ReductionPlan((ReductionLevel(
+                "global", LEVEL_AXES["global"], hier.k2, self.reducer),))
         elif algo == "sync":
             rnd = make_sync_sgd_round(loss_fn, self.optimizer,
                                       reducer=self.reducer)
+            self._batch_dims = legacy_dims
+            self._init_plan = ReductionPlan((ReductionLevel(
+                "global", LEVEL_AXES["global"], 1, self.reducer),))
         else:
             raise ValueError(algo)
         self.round_fn = jax.jit(rnd)
@@ -83,24 +102,32 @@ class Simulator:
                    for x in jax.tree.leaves(g))
 
     def _round_batch(self, key):
-        n = self.hier.k2 * self.topo.n_learners * self.B
+        n = self.hier.steps_per_round * self.topo.n_learners * self.B
         batch = self.sample(key, n)
-        shape = (self.hier.beta, self.hier.k1) + self.topo.shape + (self.B,)
+        shape = self._batch_dims + self.topo.shape + (self.B,)
         return jax.tree.map(
             lambda x: x.reshape(shape + x.shape[1:]), batch)
 
     def payload_bytes_per_reduction(self) -> int:
-        """Analytic per-learner wire bytes of one reduction under the
-        configured reducer (dense fp32 for "mean")."""
+        """Analytic per-learner wire bytes of one outermost (global)
+        reduction under the configured plan (dense fp32 for "mean")."""
         params1 = jax.eval_shape(self.init_fn,
                                  jax.ShapeDtypeStruct((2,), jnp.uint32))
         return self.reducer.payload_bytes(params1)
+
+    def payload_bytes_per_level(self) -> Dict[str, int]:
+        """Per-level analytic wire bytes of one reduction at each plan
+        level (per learner)."""
+        params1 = jax.eval_shape(self.init_fn,
+                                 jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return {lvl.name: lvl.reducer.payload_bytes(params1)
+                for lvl in self.plan.levels}
 
     def run(self, n_rounds: int, key=None) -> SimResult:
         key = self.key if key is None else key
         k_init, key = jax.random.split(key)
         state = init_state(self.topo, self.init_fn, self.optimizer, k_init,
-                           reducer=self.reducer)
+                           plan=self._init_plan)
         losses, accs, elosses, eaccs, gsq = [], [], [], [], []
         for r in range(n_rounds):
             key, kb = jax.random.split(key)

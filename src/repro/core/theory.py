@@ -132,8 +132,9 @@ def thm36_kavg_bound(K: int, alpha: float, eta: float,
 class CommModel:
     """Ring all-reduce cost model: reducing V bytes over n participants on a
     fabric of bandwidth bw costs 2V(n-1)/(n*bw) seconds (+ latency per
-    step).  Local reductions ride the fast fabric (intra-pod ICI), global
-    reductions the slow one (inter-pod DCI / the paper's InfiniBand)."""
+    step).  Reductions confined to one pod (local / pod plan levels) ride
+    the fast fabric (intra-pod ICI); levels whose scope crosses pods
+    (global) pay the slow one (inter-pod DCI / the paper's InfiniBand)."""
 
     fast_bw: float = 50.0e9          # intra-pod per-link (ICI)
     slow_bw: float = 2.5e9           # cross-pod effective per-chip (DCI)
@@ -144,6 +145,12 @@ class CommModel:
             return 0.0
         steps = 2 * (n - 1)
         return 2.0 * bytes_ * (n - 1) / (n * bw) + steps * self.latency
+
+    def bw_for_level(self, axes, pods: int) -> float:
+        """Link tier a plan level rides: DCI iff its scope includes the pod
+        axis of a multi-pod topology, ICI otherwise."""
+        return self.slow_bw if (0 in tuple(axes) and pods > 1) \
+            else self.fast_bw
 
 
 def comm_per_k2_steps(model_bytes: float, hier_k1: int, hier_k2: int,
@@ -157,6 +164,59 @@ def comm_per_k2_steps(model_bytes: float, hier_k1: int, hier_k2: int,
     local = n_local * cm.allreduce_time(model_bytes, S, cm.fast_bw)
     glob = cm.allreduce_time(model_bytes, P, cm.slow_bw)
     return local, glob
+
+
+@dataclass(frozen=True)
+class LevelCost:
+    """One ReductionPlan level's communication bill per round."""
+
+    name: str
+    participants: int        # learners averaged together at this level
+    period: int              # SGD steps between reductions
+    payload_bytes: int       # per-learner wire bytes (compressed)
+    count_per_round: int     # reductions per round (outer-subsumed removed)
+    bandwidth: float         # link tier this level rides (ICI or DCI)
+    seconds_per_round: float
+
+
+def param_template(n_params: int, dtype="bfloat16"):
+    """A square-ish single-learner matrix standing in for the model's
+    parameters — what ``Reducer.payload_bytes`` needs to size a level's
+    compressed wire cost analytically (2-D so low-rank reducers apply)."""
+    import jax
+    import jax.numpy as jnp
+    side = max(1, int(round(n_params ** 0.5)))
+    return {"params": jax.ShapeDtypeStruct(
+        (side, -(-n_params // side)), jnp.dtype(dtype))}
+
+
+def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
+                        ) -> Tuple[LevelCost, ...]:
+    """Cost every level of a ReductionPlan over its own link tier and its
+    own *compressed* payload.
+
+    ``template`` is a single-learner parameter tree (ShapeDtypeStructs
+    suffice — see :func:`param_template`); ``topo`` a
+    core.topology.HierTopology.  A level reduction coinciding with an
+    outer level's is not billed (``plan.counts_per_round`` — the payload-
+    aware-schedule convention, matching ``comm_per_k2_steps``'s
+    "subsumed" accounting; see its docstring for the caveat that the
+    scan-nest program still executes those inner reductions).
+    """
+    cm = cm or CommModel()
+    counts = dict(plan.counts_per_round())
+    out = []
+    for lvl in plan.levels:
+        n = 1
+        for a in lvl.axes:
+            n *= topo.shape[a]
+        payload = lvl.reducer.payload_bytes(template)
+        bw = cm.bw_for_level(lvl.axes, topo.pods)
+        count = counts[lvl.name]
+        secs = count * cm.allreduce_time(payload, n, bw)
+        out.append(LevelCost(lvl.name, n, lvl.period, payload, count, bw,
+                             secs))
+    return tuple(out)
 
 
 def comm_advantage(model_bytes: float, K: int, a: float, P: int, S: int = 4,

@@ -32,6 +32,7 @@ AXIS_TP = "model"
 
 LEARNER_AXES: Tuple[str, str, str] = (AXIS_POD, AXIS_GROUP, AXIS_LOCAL)
 LOCAL_ARRAY_AXES: Tuple[int, ...] = (2,)
+POD_ARRAY_AXES: Tuple[int, ...] = (1, 2)
 GLOBAL_ARRAY_AXES: Tuple[int, ...] = (0, 1, 2)
 
 
@@ -120,4 +121,4 @@ def global_average(tree, constraint_fn=None):
 def pod_average(tree, constraint_fn=None):
     """Beyond-paper: intra-pod reduction (axes group+local, not pod) —
     a middle hierarchy level matching the ICI/DCI boundary."""
-    return average_over(tree, (1, 2), constraint_fn)
+    return average_over(tree, POD_ARRAY_AXES, constraint_fn)

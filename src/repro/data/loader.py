@@ -4,8 +4,8 @@ Responsibilities:
   * per-learner INDEPENDENT streams — learner (p, g, s) draws from
     ``fold_in(round_key, learner_id)``; the paper's xi^j_{k,s} i.i.d.
     assumption is realized exactly;
-  * round batching — leaves shaped [beta, K1, pods, G, S, B, ...] to feed
-    ``make_hier_round``;
+  * round batching — leaves shaped [*plan.batch_dims, pods, G, S, B, ...]
+    to feed ``make_hier_round`` ([beta, K1, ...] for the 2-level plan);
   * optional device placement with the launcher's NamedShardings.
 """
 from __future__ import annotations
@@ -35,14 +35,14 @@ class HierDataLoader:
 
     @property
     def tokens_per_round(self) -> int:
-        return self.hier.k2 * self.topo.n_learners * self.B
+        return self.hier.steps_per_round * self.topo.n_learners * self.B
 
     def next_round(self) -> Dict[str, jax.Array]:
         key = jax.random.fold_in(self.key, self._round)
         self._round += 1
-        shape = (self.hier.beta, self.hier.k1) + self.topo.shape
+        shape = self.hier.batch_dims + self.topo.shape
         # one independent key per (step, learner) cell
-        n_cells = self.hier.k2 * self.topo.n_learners
+        n_cells = self.hier.steps_per_round * self.topo.n_learners
         keys = jax.random.split(key, n_cells)
         flat = [self.sample(k, self.B) for k in keys]
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *flat)

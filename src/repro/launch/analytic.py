@@ -140,12 +140,32 @@ def analytic_roofline(cfg: ArchConfig, shape_name: str, *,
                                 * (tp - 1) / tp) / LINK_BW
         if fsdp > 1:
             parts["fsdp"] = (2.0 * p_shard * micro * (fsdp - 1)) / LINK_BW
-        if S > 1:
-            bw = LINK_BW if lay.local > 1 else DCI_BW
-            parts["local_avg"] = (p_shard * _ring(S)) / bw / hier.k1
-        if P > 1:
-            bw = DCI_BW if multi_pod else LINK_BW
-            parts["global_avg"] = (p_shard * _ring(P)) / bw / hier.k2
+        if hier.plan is None:
+            if S > 1:
+                bw = LINK_BW if lay.local > 1 else DCI_BW
+                parts["local_avg"] = (p_shard * _ring(S)) / bw / hier.k1
+            if P > 1:
+                bw = DCI_BW if multi_pod else LINK_BW
+                parts["global_avg"] = (p_shard * _ring(P)) / bw / hier.k2
+        else:
+            # N-level plan: each level over its own link tier and its own
+            # compressed payload (reducer payload factor vs dense bf16)
+            from repro.core.theory import param_template
+            plan = hier.resolved_plan
+            template = param_template(n_total)
+            dense_bytes = sum(2 * leaf.size for leaf in template.values())
+            sizes = {0: pods, 1: lay.groups, 2: lay.local}
+            for lvl in plan.levels:
+                n = 1
+                for ax in lvl.axes:
+                    n *= sizes[ax]
+                if n <= 1:
+                    continue
+                crosses = 0 in lvl.axes and pods > 1
+                bw = DCI_BW if crosses else LINK_BW
+                factor = lvl.reducer.payload_bytes(template) / dense_bytes
+                parts[f"{lvl.name}_avg"] = \
+                    (p_shard * factor * _ring(n)) / bw / lvl.period
         det["tokens_per_device"] = tokens_dev
         model_flops = mult * n_active * tokens_dev
     elif shape.kind == "prefill":

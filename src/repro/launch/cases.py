@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.comm import EFState, get_reducer
+from repro.comm import EFState, LowRankState
 from repro.configs.base import (ArchConfig, HierAvgParams, InputShape,
                                 INPUT_SHAPES, ParallelLayout)
 from repro.core.hier_avg import init_state, make_hier_round
@@ -65,6 +65,7 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
                sync_opt_state: bool = False,
                use_constraints: bool = True) -> DryrunCase:
     hier = hier or default_hier_params(cfg)
+    plan = hier.resolved_plan
     lay = cfg.layout
     mesh = make_hier_mesh(lay, multi_pod=multi_pod)
     pods = PODS_MULTI if multi_pod else 1
@@ -72,12 +73,10 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
 
     bundle = build(cfg, param_dtype=param_dtype, remat=remat)
     optimizer = sgd(0.1)          # paper: plain SGD, step-decayed lr
-    reducer = get_reducer(hier.reducer)
 
     # ---- state structure without allocation ----
     state_struct = jax.eval_shape(
-        lambda k: init_state(topo, bundle.init, optimizer, k,
-                             reducer=reducer),
+        lambda k: init_state(topo, bundle.init, optimizer, k, plan=plan),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
     rules = PartitionRules()
     pspecs = param_pspecs(state_struct.params, mesh, stacked_learners=True,
@@ -96,14 +95,28 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
             else opt_specs
     except Exception:
         pass
-    # reducer comm state: EF ref/err mirror the params tree exactly (same
-    # shapes, fp32 err), so they reuse the params' specs — learner axes AND
-    # trailing fsdp/tp shards; the PRNG key stays replicated
-    if isinstance(state_struct.comm_state, EFState):
-        comm_specs = EFState(ref=pspecs, err=pspecs, key=P())
+    # reducer comm state, per plan level: EF ref/err (and PowerSGD ref/err)
+    # mirror the params tree exactly (same shapes, fp32 err), so they reuse
+    # the params' specs — learner axes AND trailing fsdp/tp shards; PRNG
+    # keys stay replicated, and PowerSGD's warm Q shards over the learner
+    # axes only (its trailing [b, rank] dims are tiny)
+    def level_comm_specs(cs):
+        if isinstance(cs, EFState):
+            return EFState(ref=pspecs, err=pspecs, key=P())
+        if isinstance(cs, LowRankState):
+            q_specs = jax.tree.map(
+                lambda leaf: safe_pspec(
+                    P(*(("pod", "group", "local")
+                        + (None,) * (leaf.ndim - 3))), leaf.shape, mesh),
+                cs.q)
+            return LowRankState(ref=pspecs, err=pspecs, q=q_specs)
+        return jax.tree.map(lambda leaf: P(), cs)
+
+    if isinstance(state_struct.comm_state, dict):
+        comm_specs = {name: level_comm_specs(cs)
+                      for name, cs in state_struct.comm_state.items()}
     else:
-        comm_specs = jax.tree.map(lambda leaf: P(),
-                                  state_struct.comm_state)
+        comm_specs = level_comm_specs(state_struct.comm_state)
     state_specs = state_struct.__class__(pspecs, opt_specs, P(), comm_specs)
     state_shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s), state_specs,
@@ -114,7 +127,7 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
     assert per_learner_b >= 1, (cfg.name, shape.name, topo)
     inner = train_batch_specs(cfg, per_learner_b, shape.seq_len,
                               dtype=param_dtype)
-    lead = (hier.beta, hier.k1) + topo.shape
+    lead = plan.batch_dims + topo.shape
 
     def wrap(s):
         return jax.ShapeDtypeStruct(lead + s.shape, s.dtype)
@@ -123,8 +136,10 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
 
     def bspec(s):
         tail = ("fsdp",) + (None,) * (len(s.shape) - len(lead) - 1)
-        return safe_pspec(P(*((None, None, "pod", "group", "local") + tail)),
-                          s.shape, mesh)
+        return safe_pspec(
+            P(*((None,) * len(plan.batch_dims)
+                + ("pod", "group", "local") + tail)),
+            s.shape, mesh)
 
     batch_shardings = {k: NamedSharding(mesh, bspec(v))
                        for k, v in batch_specs.items()}
@@ -154,8 +169,8 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
     return DryrunCase(
         name=f"{cfg.name}:{shape.name}:{'2pod' if multi_pod else '1pod'}",
         mesh=mesh, jitted=jitted, arg_specs=(state_struct, batch_specs),
-        steps=hier.k2,
-        notes=f"hier_round K1={hier.k1} K2={hier.k2} "
+        steps=hier.steps_per_round,
+        notes=f"hier_round plan={plan.describe()} "
               f"{topo.describe()} fsdp={lay.fsdp} tp={lay.tp} "
               f"B/learner={per_learner_b}")
 

@@ -109,6 +109,10 @@ def main() -> None:
                     help="override layout 'GxSxFxTP[:micro]' (hillclimb)")
     ap.add_argument("--k1", type=int, default=None)
     ap.add_argument("--k2", type=int, default=None)
+    ap.add_argument("--plan", default=None,
+                    help="N-level reduction plan spec (wins over "
+                         "--k1/--k2), e.g. "
+                         "'local@4:cast:bfloat16/pod@8/global@16:topk:0.05'")
     args = ap.parse_args()
 
     cases = []
@@ -129,7 +133,12 @@ def main() -> None:
         if lay is not None:
             tag += f"__L{args.layout.replace(':', 'm')}"
         kw = {}
-        if args.k1 or args.k2:
+        if args.plan:
+            from repro.configs.base import HierAvgParams
+            hp = HierAvgParams(plan=args.plan)
+            kw["hier"] = hp
+            tag += "__P" + args.plan.replace("/", "-").replace(":", "_")
+        elif args.k1 or args.k2:
             from repro.configs.base import HierAvgParams
             hp = HierAvgParams(k1=args.k1 or 4, k2=args.k2 or 8)
             kw["hier"] = hp

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
-from repro.comm import get_reducer
 from repro.configs import HierAvgParams, get_config
 from repro.core import (HierTopology, init_state, make_hier_round,
                         unstack_first)
@@ -43,7 +42,11 @@ def main() -> None:
     ap.add_argument("--reducer", default="mean",
                     help="reduction payload spec (comm/): mean | "
                          "cast[:dtype] | topk[:ratio] | randk[:ratio] | "
-                         "qint8[:block]")
+                         "qint8[:block] | powersgd[:rank]")
+    ap.add_argument("--plan", default=None,
+                    help="N-level reduction plan spec, e.g. "
+                         "'local@4:cast:bfloat16/pod@8/global@16:topk:0.05'"
+                         " — wins over --k1/--k2/--reducer")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -54,11 +57,12 @@ def main() -> None:
     assert args.learners % args.s == 0
     topo = HierTopology(pods=1, groups=args.learners // args.s,
                         local=args.s)
-    hier = HierAvgParams(k1=args.k1, k2=args.k2, reducer=args.reducer)
-    reducer = get_reducer(hier.reducer)
+    hier = HierAvgParams(k1=args.k1, k2=args.k2, reducer=args.reducer,
+                         plan=args.plan)
+    plan = hier.resolved_plan
     bundle = build(cfg)
-    optimizer = sgd(step_decay_lr(args.lr, [args.rounds * args.k2 * 3 // 4],
-                                  [0.1]))
+    optimizer = sgd(step_decay_lr(
+        args.lr, [args.rounds * hier.steps_per_round * 3 // 4], [0.1]))
 
     key = jax.random.PRNGKey(args.seed)
 
@@ -68,10 +72,10 @@ def main() -> None:
     loader = HierDataLoader(sample, topo=topo, hier=hier,
                             per_learner_batch=args.batch, seed=args.seed)
     round_fn = jax.jit(make_hier_round(bundle.loss_fn, optimizer, hier))
-    state = init_state(topo, bundle.init, optimizer, key, reducer=reducer)
+    state = init_state(topo, bundle.init, optimizer, key, plan=plan)
 
-    print(f"Hier-AVG: {topo.describe()}  K1={hier.k1} K2={hier.k2} "
-          f"reducer={reducer.describe()} arch={cfg.name}")
+    print(f"Hier-AVG: {topo.describe()}  plan={plan.describe()} "
+          f"arch={cfg.name}")
     for r in range(args.rounds):
         t0 = time.time()
         state, metrics = round_fn(state, loader.next_round())

@@ -1,0 +1,360 @@
+"""ReductionPlan (core/plan.py): spec grammar, nesting validation, legacy
+(k1, k2) bit-identity, N-level round/step semantics, the AdaptivePlan
+ladder, and the PowerSGD low-rank reducer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import LowRankState, PowerSGDReducer, get_reducer, reduce_with
+from repro.configs.base import HierAvgParams
+from repro.core import (AdaptivePlan, HierTopology, ReductionPlan, Simulator,
+                        global_average, init_state, make_hier_round,
+                        make_hier_step, resolve_plan)
+from repro.core.theory import (CommModel, param_template,
+                               plan_comm_per_round)
+from repro.optim import sgd
+
+PLAN3 = "local@4:cast:bfloat16/pod@8/global@16:topk:0.05"
+
+
+# ------------------------------ spec grammar -------------------------- #
+
+def test_parse_roundtrip_and_defaults():
+    p = ReductionPlan.parse(PLAN3)
+    assert [l.name for l in p.levels] == ["local", "pod", "global"]
+    assert [l.period for l in p.levels] == [4, 8, 16]
+    assert [l.axes for l in p.levels] == [(2,), (1, 2), (0, 1, 2)]
+    # unspecified reducer defaults to mean; describe() round-trips
+    assert p.levels[1].reducer.describe() == "mean"
+    assert ReductionPlan.parse(p.describe()).describe() == p.describe()
+    assert p.total_period == 16
+    assert p.batch_dims == (2, 2, 4)
+    assert dict(p.counts_per_round()) == {"local": 2, "pod": 1, "global": 1}
+
+
+def test_from_k1_k2_matches_legacy_layout():
+    p = ReductionPlan.from_k1_k2(4, 8, "topk:0.1")
+    assert p.batch_dims == (2, 4)           # (beta, K1)
+    assert p.describe() == "local@4:topk:0.1/global@8:topk:0.1"
+
+
+@pytest.mark.parametrize("bad", [
+    "local@4",                       # single level is fine -> see below
+    "pod@4/local@8",                 # axes shrink outward
+    "local@3/global@8",              # period does not divide
+    "local@8/global@4",              # periods decrease
+    "local@4/local@8",               # duplicate name
+    "rack@4/global@8",               # unknown level name
+    "local@x/global@8",              # bad period
+    "local@4/global@8:gzip",         # unknown reducer
+    "local4/global@8",               # missing @
+])
+def test_invalid_specs_raise(bad):
+    if bad == "local@4":             # a 1-level plan IS valid (K-AVG)
+        p = ReductionPlan.parse(bad)
+        assert p.batch_dims == (4,)
+        return
+    with pytest.raises(ValueError):
+        ReductionPlan.parse(bad)
+
+
+def test_hier_params_plan_backfills_k1_k2():
+    h = HierAvgParams(plan=PLAN3)
+    assert (h.k1, h.k2, h.steps_per_round) == (4, 16, 16)
+    assert h.batch_dims == (2, 2, 4)
+    with pytest.raises(ValueError):
+        HierAvgParams(plan="local@8/global@4")
+    # legacy params keep their validation
+    with pytest.raises(ValueError):
+        HierAvgParams(k1=3, k2=8)
+
+
+def test_resolve_plan_precedence():
+    h = HierAvgParams(k1=2, k2=4, reducer="qint8:128")
+    p = resolve_plan(h)
+    assert p.describe() == "local@2:qint8:128/global@4:qint8:128"
+    # explicit reducer overrides every level (legacy single-reducer knob)
+    p2 = resolve_plan(h, reducer="cast:bfloat16")
+    assert all(l.reducer.describe() == "cast:bfloat16" for l in p2.levels)
+    # explicit plan wins over the config
+    p3 = resolve_plan(h, plan="local@1/pod@2/global@4")
+    assert len(p3.levels) == 3
+
+
+# --------------------- legacy <-> 2-level plan bit-identity ----------- #
+
+@pytest.mark.parametrize("reducer", [
+    "mean", "cast:bfloat16",
+    pytest.param("topk:0.25", marks=pytest.mark.slow)])
+def test_legacy_params_bit_identical_to_2level_plan(cls_task, reducer):
+    """HierAvgParams(k1, k2, reducer) trajectories are bit-identical to the
+    equivalent explicit 2-level plan spec."""
+    topo = HierTopology(1, 2, 2)
+    kw = dict(topo=topo, optimizer=sgd(0.05), seed=3,
+              eval_batch=cls_task["eval_batch"], per_learner_batch=8)
+    legacy = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                       cls_task["sample"],
+                       hier=HierAvgParams(k1=4, k2=8, reducer=reducer),
+                       **kw).run(3)
+    spec = f"local@4:{reducer}/global@8:{reducer}"
+    planned = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                        cls_task["sample"],
+                        hier=HierAvgParams(plan=spec), **kw).run(3)
+    np.testing.assert_array_equal(legacy.losses, planned.losses)
+    np.testing.assert_array_equal(legacy.eval_losses, planned.eval_losses)
+    for a, b in zip(jax.tree.leaves(legacy.state.params),
+                    jax.tree.leaves(planned.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------- N-level semantics ------------------------ #
+
+def test_all_period_1_plan_equals_sync_sgd(cls_task):
+    """A 3-level plan with period=1 everywhere averages everyone every
+    step == synchronous parallel SGD (means of nested means)."""
+    topo = HierTopology(2, 2, 2)
+    kw = dict(topo=topo, optimizer=sgd(0.05), seed=5,
+              eval_batch=cls_task["eval_batch"], per_learner_batch=8)
+    r1 = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                   cls_task["sample"], algo="hier",
+                   hier=HierAvgParams(plan="local@1/pod@1/global@1"),
+                   **kw).run(4)
+    r2 = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                   cls_task["sample"], algo="sync",
+                   hier=HierAvgParams(k1=1, k2=1), **kw).run(4)
+    np.testing.assert_allclose(r1.eval_losses, r2.eval_losses, rtol=1e-5)
+
+
+def test_step_api_matches_round_api_3level(cls_task):
+    """make_hier_step applied total_period times == make_hier_round once,
+    exercising the per-level counter masks of all three levels."""
+    topo = HierTopology(2, 1, 2)
+    h = HierAvgParams(plan="local@2/pod@4/global@8")
+    opt = sgd(0.05)
+    key = jax.random.PRNGKey(3)
+    state_a = init_state(topo, cls_task["init_fn"], opt, key)
+    state_b = init_state(topo, cls_task["init_fn"], opt, key)
+    n = h.steps_per_round * topo.n_learners * 4
+    batch = cls_task["sample"](jax.random.PRNGKey(4), n)
+    shaped = jax.tree.map(
+        lambda x: x.reshape(h.batch_dims + topo.shape + (4,)
+                            + x.shape[1:]), batch)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    state_a, _ = round_fn(state_a, shaped)
+
+    step_fn = jax.jit(make_hier_step(cls_task["loss_fn"], opt, h))
+    flat = jax.tree.map(
+        lambda x: x.reshape((h.steps_per_round,) + topo.shape + (4,)
+                            + x.shape[len(h.batch_dims) + 4:]), shaped)
+    for t in range(h.steps_per_round):
+        mb = jax.tree.map(lambda x: x[t], flat)
+        state_b, _ = step_fn(state_b, mb)
+    for la, lb in zip(jax.tree.leaves(state_a.params),
+                      jax.tree.leaves(state_b.params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_3level_mixed_reducer_plan_trains(cls_task):
+    """The acceptance plan (cast local / mean pod / topk global) trains
+    end-to-end in the Simulator."""
+    topo = HierTopology(2, 2, 2)
+    sim = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                    cls_task["sample"], topo=topo,
+                    hier=HierAvgParams(plan=PLAN3), optimizer=sgd(0.1),
+                    eval_batch=cls_task["eval_batch"], seed=1,
+                    per_learner_batch=8)
+    r = sim.run(5)
+    assert np.isfinite(r.eval_losses).all()
+    assert r.eval_losses[-1] < 0.8 * r.eval_losses[0]
+    # per-level payload accounting: topk global is the smallest
+    per_level = sim.payload_bytes_per_level()
+    assert set(per_level) == {"local", "pod", "global"}
+    assert per_level["global"] < per_level["local"] <= per_level["pod"]
+
+
+def test_pod_level_consensus_scope(cls_task):
+    """After a pod-level reduction learners agree within a pod but not
+    across pods; after the global one everyone agrees."""
+    topo = HierTopology(2, 2, 2)
+    h = HierAvgParams(plan="local@1/pod@2/global@4")
+    opt = sgd(0.05)
+    step_fn = jax.jit(make_hier_step(cls_task["loss_fn"], opt, h))
+    state = init_state(topo, cls_task["init_fn"], opt, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    for t in range(1, h.steps_per_round + 1):
+        key, kb = jax.random.split(key)
+        batch = cls_task["sample"](kb, topo.n_learners * 8)
+        shaped = jax.tree.map(
+            lambda x: x.reshape(topo.shape + (8,) + x.shape[1:]), batch)
+        state, _ = step_fn(state, shaped)
+        leaf = jax.tree.leaves(state.params)[0]
+        per_pod = leaf.reshape((2, 4) + leaf.shape[3:])
+        pod_consensus = all(
+            bool(jnp.allclose(per_pod[p], per_pod[p, 0:1], atol=1e-6))
+            for p in range(2))
+        cross_pod = bool(jnp.allclose(per_pod[0], per_pod[1], atol=1e-6))
+        if t == 2:          # pod fires (t%2==0, t%4!=0)
+            assert pod_consensus and not cross_pod
+        if t == 4:          # global fires
+            assert pod_consensus and cross_pod
+
+
+# ------------------------------ schedules ----------------------------- #
+
+def test_adaptive_plan_ladder():
+    """AdaptivePlan scales the outermost period only: wide while the loss
+    is high, down to the next-inner period near convergence, inner levels
+    untouched."""
+    ctl = AdaptivePlan("local@2:cast:bfloat16/pod@4/global@32:topk:0.1")
+    p0 = ctl.plan_for(10.0)                 # initial loss -> max interval
+    assert p0.total_period == 32
+    p_half = ctl.plan_for(5.0)
+    p_tiny = ctl.plan_for(0.05)
+    assert 4 <= p_tiny.total_period <= p_half.total_period <= 32
+    for p in (p0, p_half, p_tiny):
+        # inner periods and per-level reducers never move
+        assert [l.period for l in p.levels[:-1]] == [2, 4]
+        assert p.levels[0].reducer.describe() == "cast:bfloat16"
+        assert p.levels[-1].reducer.describe() == "topk:0.1"
+        assert p.total_period % 4 == 0      # nesting kept
+    h = ctl.params_for(0.05)
+    assert h.plan == p_tiny.describe()
+    assert h.k2 == p_tiny.total_period
+
+
+def test_adaptive_k2_delegates_to_plan_ladder():
+    """The legacy AdaptiveK2 API is the 2-level specialization."""
+    from repro.core import AdaptiveK2
+    ctl = AdaptiveK2(k1=4, k2_max=64)
+    ctl2 = AdaptivePlan("local@4/global@64")
+    assert ctl.k2_for(8.0) == ctl2.outer_for(8.0) == 64
+    assert ctl.k2_for(0.1) == ctl2.outer_for(0.1)
+    # legacy tolerance: non-divisible bounds are floored, not rejected
+    loose = AdaptiveK2(k1=4, k2_max=10, k2_min=6)
+    assert (loose.k2_max, loose.k2_min) == (8, 4)
+    assert loose.k2_for(1.0) == 8 and loose.k2_for(1e-6) == 4
+
+
+# --------------------------- per-level costing ------------------------ #
+
+def test_plan_comm_per_round_tiers_and_counts():
+    plan = ReductionPlan.parse(PLAN3)
+    topo = HierTopology(2, 2, 4)
+    cm = CommModel()
+    template = param_template(1_000_000, dtype="float32")
+    costs = {c.name: c for c in plan_comm_per_round(plan, topo, template,
+                                                    cm)}
+    assert costs["local"].participants == 4
+    assert costs["pod"].participants == 8
+    assert costs["global"].participants == 16
+    # local/pod ride ICI; only the global level crosses DCI
+    assert costs["local"].bandwidth == cm.fast_bw
+    assert costs["pod"].bandwidth == cm.fast_bw
+    assert costs["global"].bandwidth == cm.slow_bw
+    # subsumption: 4 local slots per round, 2 coincide with outer levels
+    assert costs["local"].count_per_round == 2
+    assert costs["pod"].count_per_round == 1
+    # compressed payloads: cast halves fp32, topk 5% ~ 10x smaller
+    dense = 4_000_000
+    assert costs["local"].payload_bytes <= 0.51 * dense
+    assert costs["global"].payload_bytes <= 0.11 * dense
+    # single-pod topology: nothing crosses DCI
+    costs1 = plan_comm_per_round(plan, HierTopology(1, 2, 4), template, cm)
+    assert all(c.bandwidth == cm.fast_bw for c in costs1)
+
+
+# ------------------------------ PowerSGD ------------------------------ #
+
+def test_powersgd_registry_and_payload():
+    red = get_reducer("powersgd:4")
+    assert isinstance(red, PowerSGDReducer) and red.rank == 4
+    assert get_reducer("powersgd").rank == 2
+    with pytest.raises(ValueError):
+        get_reducer("powersgd:0")
+    # matrix leaves go low-rank, vectors stay dense fp32
+    tree = {"w": jnp.zeros((64, 48)), "b": jnp.zeros((64,))}
+    assert red.payload_bytes(tree) == (64 + 48) * 4 * 4 + 64 * 4
+    dense = 64 * 48 * 4 + 64 * 4
+    assert dense / red.payload_bytes(tree) > 5.0
+
+
+def test_powersgd_rank_r_delta_roundtrip():
+    """A delta that is exactly rank-r is reconstructed (near-)exactly by
+    one warm-started power iteration + EF: the residual is ~0."""
+    topo = HierTopology(1, 1, 2)
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(key, topo.shape + (32, 2))
+    v = jax.random.normal(jax.random.fold_in(key, 1), topo.shape + (2, 24))
+    x = u @ v                                  # per-learner rank-2 matrix
+    red = PowerSGDReducer(rank=2)
+    st = red.init_state({"w": jnp.zeros_like(x)})   # ref=0 -> delta == x
+    payload, st = red.compress({"w": x}, st)
+    err = jax.tree.leaves(st.err)[0]
+    assert float(jnp.max(jnp.abs(err))) < 1e-3 * float(jnp.max(jnp.abs(x)))
+    xhat = red.decompress(payload, {"w": x}, st)["w"]
+    np.testing.assert_allclose(np.asarray(xhat), np.asarray(x), atol=1e-3)
+
+
+def test_powersgd_warm_q_and_ef_update():
+    topo = HierTopology(1, 1, 2)
+    x = jax.random.normal(jax.random.PRNGKey(2), topo.shape + (16, 12))
+    red = PowerSGDReducer(rank=2)
+    st0 = red.init_state({"w": jnp.zeros_like(x)})
+    q0 = jax.tree.leaves(st0.q)[0]
+    payload, st1 = red.compress({"w": x}, st0)
+    q1 = jax.tree.leaves(st1.q)[0]
+    assert q0.shape == q1.shape == topo.shape + (12, 2)
+    assert not bool(jnp.allclose(q0, q1))      # Q warm start advanced
+    # EF residual is exactly the unreconstructed mass
+    (p_hat, q_new), = payload
+    approx = jnp.einsum("nar,nbr->nab", p_hat, q_new).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(jax.tree.leaves(st1.err)[0]),
+                               np.asarray(x - approx), atol=1e-5)
+
+
+def test_powersgd_hier_round_keeps_consensus(cls_task):
+    topo = HierTopology(1, 2, 2)
+    h = HierAvgParams(k1=2, k2=4, reducer="powersgd:2")
+    opt = sgd(0.05)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    state = init_state(topo, cls_task["init_fn"], opt,
+                       jax.random.PRNGKey(0), plan=h.resolved_plan)
+    assert isinstance(state.comm_state["global"], LowRankState)
+    batch = cls_task["sample"](jax.random.PRNGKey(1),
+                               h.k2 * topo.n_learners * 8)
+    shaped = jax.tree.map(
+        lambda x: x.reshape((h.beta, h.k1) + topo.shape + (8,)
+                            + x.shape[1:]), batch)
+    state, _ = round_fn(state, shaped)
+    for leaf in jax.tree.leaves(state.params):
+        flat = leaf.reshape((topo.n_learners,) + leaf.shape[3:])
+        assert bool(jnp.allclose(flat, flat[0:1], atol=1e-6))
+
+
+@pytest.mark.slow
+def test_powersgd_convergence_near_dense(cls_task):
+    """PowerSGD Hier-AVG reaches within 3% eval accuracy of the dense
+    mean on the shared classification task."""
+    topo = HierTopology(1, 2, 4)
+    h = HierAvgParams(k1=2, k2=8)
+    kw = dict(topo=topo, hier=h, optimizer=sgd(0.1), seed=1,
+              eval_batch=cls_task["eval_batch"], per_learner_batch=16)
+    dense = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                      cls_task["sample"], reducer="mean", **kw).run(10)
+    lowrank = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                        cls_task["sample"], reducer="powersgd:4",
+                        **kw).run(10)
+    assert lowrank.final_eval_acc >= dense.final_eval_acc - 0.03, (
+        lowrank.final_eval_acc, dense.final_eval_acc)
+
+
+def test_global_average_matches_reduce_with_mean():
+    """Sanity: the plan's outermost mean is the paper's global average."""
+    topo = HierTopology(2, 1, 2)
+    x = jax.random.normal(jax.random.PRNGKey(7), topo.shape + (5,))
+    red = get_reducer("mean")
+    out, _ = reduce_with(red, global_average, {"w": x}, ())
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(global_average({"w": x})["w"]))
