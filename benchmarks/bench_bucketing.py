@@ -1,0 +1,122 @@
+"""Per-leaf vs bucketed reduction A/B (comm/bucket.py).
+
+Three measurements per reducer variant on a deep (many-leaf) MLP:
+
+  * wall-clock per Hier-AVG round (Simulator, CPU),
+  * analytic per-learner payload bytes of one global reduction,
+  * grouped collectives per global reduction, counted from compiled HLO
+    (launch/hlo_analysis.py) of the reduction jitted over an 8-way
+    learner mesh — this needs >= 8 host devices
+    (``--xla_force_host_platform_device_count``, set by benchmarks/run.py
+    and by this module when run standalone); with fewer devices the
+    collective count is reported as 0 with a note.
+
+The headline claim: bucketing turns O(n_leaves) grouped collectives into
+O(n_buckets) per reduction at unchanged payload, with no wall-clock
+regression — and gives topk a global k-of-the-model selection.
+
+``run(smoke=True)`` (CI) does 2 rounds instead of 12.  Machine-readable
+records for BENCH_reduction.json are left in ``RECORDS``.
+
+Standalone: PYTHONPATH=src python -m benchmarks.bench_bucketing [--smoke]
+"""
+from __future__ import annotations
+
+import os
+
+if "jax" not in __import__("sys").modules:   # standalone: force devices
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
+from typing import Dict, List   # noqa: E402
+
+import jax                      # noqa: E402
+import numpy as np              # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.comm import reduce_with                      # noqa: E402
+from repro.configs.base import HierAvgParams            # noqa: E402
+from repro.core import HierTopology, Simulator          # noqa: E402
+from repro.core.plan import resolve_plan                # noqa: E402
+from repro.core.topology import global_average, stack_like  # noqa: E402
+from repro.launch import hlo_analysis as ha             # noqa: E402
+from repro.optim import sgd                             # noqa: E402
+from benchmarks.common import Row, cls_setup, timed_run  # noqa: E402
+
+# deep-ish MLP: 7 layers x (w, b) = 14 leaves, so the per-leaf path pays
+# 14 grouped collectives where the bucketed path pays 1 (one f32 bucket)
+HIDDEN = (48,) * 6
+VARIANTS = (
+    ("mean", "mean", 0),                 # dense reference (never bucketed)
+    ("topk:0.05:perleaf", "topk:0.05", 0),
+    ("topk:0.05:bucketed", "topk:0.05", 4 << 20),
+    ("qint8:128:perleaf", "qint8:128", 0),
+    ("qint8:128:bucketed", "qint8:128", 4 << 20),
+)
+ROUNDS = 12
+
+# machine-readable rows for BENCH_reduction.json (benchmarks/run.py)
+RECORDS: List[Dict] = []
+
+
+def _hlo_collectives(reducer, init_fn) -> int:
+    """Grouped all-reduces one global reduction dispatches, from the
+    compiled (SPMD-partitioned) HLO over an 8-learner mesh."""
+    if jax.device_count() < 8:
+        return 0
+    topo = HierTopology(1, 2, 4)
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(topo.shape),
+                ("pod", "group", "local"))
+
+    params1 = jax.eval_shape(init_fn, jax.ShapeDtypeStruct((2,), np.uint32))
+    params = jax.eval_shape(lambda p: stack_like(topo, p), params1)
+    state = jax.eval_shape(reducer.init_state, params)
+
+    def shard(leaf):
+        spec = P("pod", "group", "local") if leaf.ndim >= 3 else P()
+        return NamedSharding(mesh, spec)
+
+    def reduction(p, s):
+        return reduce_with(reducer, global_average, p, s)
+
+    shardings = (jax.tree.map(shard, params), jax.tree.map(shard, state))
+    hlo = jax.jit(reduction, in_shardings=shardings) \
+        .lower(params, state).compile().as_text()
+    summary = ha.collective_summary(ha.parse_collectives(hlo))
+    return summary.get("all-reduce", {}).get("count", 0)
+
+
+def run(smoke: bool = False) -> List[Row]:
+    RECORDS.clear()
+    setup = cls_setup(hidden=HIDDEN)
+    rounds = 2 if smoke else ROUNDS
+    topo = HierTopology(1, 2, 2)
+    rows: List[Row] = []
+    for name, spec, bucket_bytes in VARIANTS:
+        hier = HierAvgParams(k1=2, k2=4, reducer=spec,
+                             bucket_bytes=bucket_bytes)
+        sim = Simulator(setup["loss_fn"], setup["init_fn"], setup["sample"],
+                        topo=topo, hier=hier, optimizer=sgd(0.1),
+                        per_learner_batch=16,
+                        eval_batch=setup["eval_batch"], seed=7)
+        res, us = timed_run(sim, rounds)
+        payload = sim.payload_bytes_per_reduction()
+        global_red = resolve_plan(hier).levels[-1].reducer
+        colls = _hlo_collectives(global_red, setup["init_fn"])
+        derived = (f"payload_B={payload} collectives={colls} "
+                   f"eval_acc={res.final_eval_acc:.4f}")
+        rows.append((f"bucketing/{name}", us, derived))
+        RECORDS.append({"name": name, "us": round(us, 1),
+                        "payload_B": payload, "collectives": colls})
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for n, us, d in run(smoke=args.smoke):
+        print(f"{n},{us:.0f},{d}")

@@ -25,24 +25,32 @@ GRID = (  # (K1, K2, S) with P = 8 learners
 ROUNDS = 12
 
 
+def _measure(setup, topo, k1: int, k2: int, spec: str):
+    hier = HierAvgParams(k1=k1, k2=k2, reducer=spec)
+    sim = Simulator(setup["loss_fn"], setup["init_fn"],
+                    setup["sample"], topo=topo, hier=hier,
+                    optimizer=sgd(0.1), per_learner_batch=16,
+                    eval_batch=setup["eval_batch"], seed=3)
+    res, us = timed_run(sim, ROUNDS)
+    return res, us, sim.payload_bytes_per_reduction()
+
+
 def run() -> List[Row]:
     setup = cls_setup()
     rows: List[Row] = []
     for k1, k2, s in GRID:
         topo = HierTopology(pods=1, groups=8 // s, local=s)
-        dense_acc = None
-        dense_bytes = None
+        # the dense fp32 baseline runs FIRST, explicitly — every other row
+        # divides by its payload/accuracy, so it must not depend on where
+        # (or whether) "mean" appears in REDUCERS
+        dense_res, dense_us, dense_bytes = _measure(setup, topo, k1, k2,
+                                                    "mean")
+        dense_acc = dense_res.final_eval_acc
         for spec in REDUCERS:
-            hier = HierAvgParams(k1=k1, k2=k2, reducer=spec)
-            sim = Simulator(setup["loss_fn"], setup["init_fn"],
-                            setup["sample"], topo=topo, hier=hier,
-                            optimizer=sgd(0.1), per_learner_batch=16,
-                            eval_batch=setup["eval_batch"], seed=3)
-            res, us = timed_run(sim, ROUNDS)
-            payload = sim.payload_bytes_per_reduction()
             if spec == "mean":
-                dense_acc = res.final_eval_acc
-                dense_bytes = payload
+                res, us, payload = dense_res, dense_us, dense_bytes
+            else:
+                res, us, payload = _measure(setup, topo, k1, k2, spec)
             derived = (f"payload_B={payload} "
                        f"reduction_x={dense_bytes / payload:.2f} "
                        f"eval_acc={res.final_eval_acc:.4f} "

@@ -9,26 +9,51 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_layouts     -> beyond-paper per-arch layout optimization sweep
   bench_comm        -> the paper's communication-saving claim, quantified
   bench_compression -> reducer sweep: payload bytes vs converged accuracy
+  bench_bucketing   -> per-leaf vs bucketed reduction A/B (comm/bucket.py)
   roofline          -> §Roofline rows from the dry-run artifacts (if present)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only fig1]
+``bench_bucketing`` additionally writes machine-readable
+``BENCH_reduction.json`` at the repo root (schema per row: name, us,
+payload_B, collectives) so successive PRs can track the reduction-path
+perf trajectory; CI uploads it as an artifact.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig1] [--smoke]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark module name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal rounds (CI regression canary)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_adaptive_k2, bench_comm, bench_compression,
-                            bench_k1_s, bench_k2, bench_large_proxy,
-                            bench_layouts, bench_vs_kavg, roofline)
+    if args.only is not None and args.only in "bench_bucketing":
+        # >= 8 host devices so bench_bucketing can compile the
+        # SPMD-partitioned reduction and count its grouped collectives
+        # from HLO; set before the suites import jax (below), and ONLY
+        # for a filtered bucketing run so every other suite's timings
+        # keep their single-device baseline (in unfiltered full runs
+        # bench_bucketing reports collectives=0 instead — use
+        # `--only bucketing` for the collective counts, as CI does)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
+
+    from benchmarks import (bench_adaptive_k2, bench_bucketing, bench_comm,
+                            bench_compression, bench_k1_s, bench_k2,
+                            bench_large_proxy, bench_layouts, bench_vs_kavg,
+                            roofline)
     suites = [
         ("bench_k2", bench_k2.run),
         ("bench_k1_s", bench_k1_s.run),
@@ -38,6 +63,8 @@ def main() -> None:
         ("bench_layouts", bench_layouts.run),
         ("bench_comm", bench_comm.run),
         ("bench_compression", bench_compression.run),
+        ("bench_bucketing",
+         lambda: bench_bucketing.run(smoke=args.smoke)),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")
@@ -53,6 +80,15 @@ def main() -> None:
             failed += 1
             print(f"{name},0,ERROR", flush=True)
             traceback.print_exc()
+        if name == "bench_bucketing" and bench_bucketing.RECORDS:
+            # smoke runs go to a sibling file so they never clobber the
+            # checked-in full-round snapshot (README "Bucketed reductions")
+            fname = "BENCH_reduction.smoke.json" if args.smoke \
+                else "BENCH_reduction.json"
+            out = os.path.join(_REPO_ROOT, fname)
+            with open(out, "w") as f:
+                json.dump(bench_bucketing.RECORDS, f, indent=2)
+            print(f"# wrote {out}", file=sys.stderr, flush=True)
     if failed:
         sys.exit(1)
 

@@ -11,6 +11,14 @@ Pick a reducer by spec string (``HierAvgParams.reducer`` / ``--reducer``):
     "powersgd[:rank]"     PowerSGD low-rank factors, EF + warm-started Q
 
 e.g. ``get_reducer("topk:0.05")`` transmits 5% of coordinates.
+
+A trailing ``:bucketed`` / ``:perleaf`` modifier forces packing on or off
+for that reducer (comm/bucket.py): ``"topk:0.05:bucketed"`` compresses and
+all-reduces whole flat buckets (global k-of-the-model selection, one
+collective per bucket); ``"topk:0.05:perleaf"`` pins the legacy per-leaf
+pipeline even when the plan's ``bucket_bytes`` knob is on.  Without a
+modifier, plan resolution (core/plan.py) buckets compressed reducers by
+default.
 """
 from repro.comm.reducer import (CastReducer, MeanReducer,  # noqa: F401
                                 Reducer, reduce_with)
@@ -18,8 +26,11 @@ from repro.comm.sparse import (EFState, RandKReducer,  # noqa: F401
                                TopKReducer)
 from repro.comm.quant import QInt8Reducer  # noqa: F401
 from repro.comm.lowrank import LowRankState, PowerSGDReducer  # noqa: F401
+from repro.comm.bucket import (DEFAULT_BUCKET_BYTES,  # noqa: F401
+                               Bucketed, BucketLayout)
 
 REDUCER_NAMES = ("mean", "cast", "topk", "randk", "qint8", "powersgd")
+_MODIFIERS = ("bucketed", "perleaf")
 
 
 def get_reducer(spec, **kw) -> Reducer:
@@ -31,18 +42,31 @@ def get_reducer(spec, **kw) -> Reducer:
         return spec
     if spec is None:
         return MeanReducer()
-    name, _, arg = str(spec).partition(":")
+    spec = str(spec)
+    modifier = None
+    head, _, tail = spec.rpartition(":")
+    if head and tail in _MODIFIERS:
+        spec, modifier = head, tail
+    name, _, arg = spec.partition(":")
     if name == "mean":
-        return MeanReducer()
-    if name == "cast":
-        return CastReducer(arg or "bfloat16")
-    if name == "topk":
-        return TopKReducer(float(arg or 0.1), **kw)
-    if name == "randk":
-        return RandKReducer(float(arg or 0.1), **kw)
-    if name == "qint8":
-        return QInt8Reducer(int(arg or 256))
-    if name == "powersgd":
-        return PowerSGDReducer(int(arg or 2))
-    raise ValueError(
-        f"unknown reducer spec {spec!r}; known: {REDUCER_NAMES}")
+        red = MeanReducer()
+    elif name == "cast":
+        red = CastReducer(arg or "bfloat16")
+    elif name == "topk":
+        red = TopKReducer(float(arg or 0.1), **kw)
+    elif name == "randk":
+        red = RandKReducer(float(arg or 0.1), **kw)
+    elif name == "qint8":
+        red = QInt8Reducer(int(arg or 256))
+    elif name == "powersgd":
+        red = PowerSGDReducer(int(arg or 2))
+    else:
+        raise ValueError(
+            f"unknown reducer spec {spec!r}; known: {REDUCER_NAMES} "
+            f"(+ optional ':bucketed' / ':perleaf' modifier)")
+    if modifier == "bucketed":
+        return Bucketed(red)
+    if modifier == "perleaf":
+        red.bucket_opt_out = True   # declared on Reducer; describe()
+        # appends ":perleaf" from it, so the spec round-trips
+    return red

@@ -1,0 +1,327 @@
+"""Bucketed flat-buffer reductions: pack the pytree once, compress and
+all-reduce a few big contiguous buckets instead of one collective per leaf.
+
+The per-leaf pipeline (comm/reducer.py) pays O(n_leaves) grouped
+collectives and O(n_leaves) compression kernel launches per reduction, and
+sparse reducers pick k *per leaf* — while the convergence analyses they
+lean on (Stich et al., arXiv:1805.09767) assume top-k over the full
+parameter vector.  Packing fixes all three at once (the PowerSGD /
+Hivemind "flat grads" recipe):
+
+  * :class:`BucketLayout` — computed once per (treedef, shapes, dtypes)
+    from the param pytree: dtype-grouped, size-capped buckets of the
+    per-learner trailing dims, preserving the stacked ``[pods, G, S]``
+    learner axes.  ``pack`` is one reshape + one concat per bucket (no
+    per-leaf dispatch on the hot path); ``unpack`` is static slices.
+  * :class:`Bucketed` — wraps any comm/ Reducer so it sees whole buckets
+    as its leaves: O(n_buckets) collectives, a *global* k-of-the-model
+    selection for topk/randk (more accuracy per payload byte), and one
+    tiled kernel pass over a flat buffer instead of many ragged launches.
+
+Layout contract: buckets carry the same stacked learner axes as the leaves
+they pack (``[pods, G, S, n]``; matrix-mode ``[pods, G, S, a, b]``), so the
+grouped means of core/topology.py — and GSPMD's lowering of them to grouped
+all-reduces — apply to buckets unchanged.  Packing permutes no values and
+the learner-axis mean is elementwise, so bucketed mean/cast are
+*bit-identical* to the per-leaf path (test-enforced); bucketed topk/randk
+differ by design (global k vs per-leaf k).
+
+Error-feedback state lives in bucket space: ``Bucketed.init_state`` packs
+the params first, and every compress re-derives the layout and checks the
+carried state against it, so a layout/state mismatch fails loudly instead
+of silently misaligning residuals.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.reducer import N_LEARNER_AXES, Reducer
+
+# Default per-bucket cap (bytes of one learner's slice).  4 MiB keeps a
+# whole fp32 bucket row (~1M elements) inside a TPU core's VMEM budget for
+# the Pallas topk_compress kernel, and is large enough that transformer
+# blocks pack into a handful of buckets.  The single source of truth:
+# HierAvgParams.bucket_bytes and --bucket-bytes default to this.
+DEFAULT_BUCKET_BYTES = 4 << 20
+
+
+@dataclass(frozen=True)
+class BucketSlot:
+    """Where one leaf lives inside its bucket."""
+
+    leaf: int                  # index into the flattened tree
+    offset: int                # element offset within the bucket
+    size: int                  # per-learner element count
+    shape: Tuple[int, ...]     # per-learner trailing shape
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """One contiguous, single-dtype bucket."""
+
+    dtype: str                 # canonical dtype name (hashable)
+    size: int                  # unpadded per-learner element count
+    shape: Tuple[int, ...]     # per-learner bucket shape: (size,) flat, or
+                               # (a, b) zero-padded in matrix mode
+    slots: Tuple[BucketSlot, ...]
+
+    @property
+    def padded_size(self) -> int:
+        return math.prod(self.shape)
+
+
+def _matrix_shape(size: int) -> Tuple[int, int]:
+    """Near-square (a, b) with a*b >= size — matrix view for low-rank
+    reducers (pad is zero-filled and stripped on unpack)."""
+    a = max(1, int(math.isqrt(size)))
+    b = -(-size // a)
+    return a, b
+
+
+@dataclass(frozen=True)
+class BucketLayout:
+    """Static packing plan for one pytree (shape/dtype) signature.
+
+    ``lead_axes`` is the number of leading stacked-learner axes every leaf
+    carries (3 for train-state trees, 0 for the single-learner templates
+    ``payload_bytes`` sizes).
+    """
+
+    treedef: Any
+    lead_axes: int
+    buckets: Tuple[BucketSpec, ...]
+
+    # ------------------------------------------------------------------ #
+    # construction
+    # ------------------------------------------------------------------ #
+
+    @classmethod
+    def build(cls, tree, *, bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+              lead_axes: int = N_LEARNER_AXES,
+              matrix: bool = False) -> "BucketLayout":
+        """Dtype-grouped, size-capped buckets in leaf order.
+
+        A leaf larger than ``bucket_bytes`` gets a bucket of its own
+        (leaves are never split across buckets); ``bucket_bytes <= 0``
+        means one bucket per dtype.
+        """
+        leaves, treedef = jax.tree.flatten(tree)
+        per_dtype: Dict[str, List[Tuple[int, Tuple[int, ...], int]]] = {}
+        for i, leaf in enumerate(leaves):
+            if len(leaf.shape) < lead_axes:
+                raise ValueError(
+                    f"leaf {i} has shape {tuple(leaf.shape)} but the layout "
+                    f"expects {lead_axes} leading learner axes")
+            shape = tuple(leaf.shape[lead_axes:])
+            size = math.prod(shape) if shape else 1
+            name = jnp.dtype(leaf.dtype).name
+            per_dtype.setdefault(name, []).append((i, shape, size))
+
+        buckets: List[BucketSpec] = []
+        for name, entries in per_dtype.items():   # insertion order (3.7+)
+            itemsize = jnp.dtype(name).itemsize
+            cap = (bucket_bytes // itemsize) if bucket_bytes > 0 else 0
+            slots: List[BucketSlot] = []
+            filled = 0
+
+            def flush():
+                nonlocal slots, filled
+                if not slots:
+                    return
+                shape = (_matrix_shape(filled) if matrix else (filled,))
+                buckets.append(BucketSpec(name, filled, shape,
+                                          tuple(slots)))
+                slots, filled = [], 0
+
+            for i, shape, size in entries:
+                if cap and slots and filled + size > cap:
+                    flush()
+                slots.append(BucketSlot(i, filled, size, shape))
+                filled += size
+            flush()
+        return cls(treedef, lead_axes, tuple(buckets))
+
+    # ------------------------------------------------------------------ #
+    # derived facts
+    # ------------------------------------------------------------------ #
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def n_leaves(self) -> int:
+        return sum(len(b.slots) for b in self.buckets)
+
+    def bucket_structs(self, lead: Tuple[int, ...] = ()
+                       ) -> List[jax.ShapeDtypeStruct]:
+        """Shape/dtype templates of the packed buckets (for analytic
+        accounting — no arrays allocated)."""
+        return [jax.ShapeDtypeStruct(lead + b.shape, jnp.dtype(b.dtype))
+                for b in self.buckets]
+
+    def describe(self) -> str:
+        return (f"{self.n_leaves} leaves -> {self.n_buckets} bucket(s): "
+                + ", ".join(f"{b.dtype}[{b.size}]" for b in self.buckets))
+
+    # ------------------------------------------------------------------ #
+    # pack / unpack
+    # ------------------------------------------------------------------ #
+
+    def pack(self, tree) -> List[jax.Array]:
+        """Pytree -> list of bucket arrays ``[*lead, *bucket.shape]``.
+
+        One reshape per leaf (free — layout metadata only) and one concat
+        per bucket; values are never permuted, so elementwise reductions
+        over the lead axes commute with packing bit-for-bit.
+        """
+        leaves = self.treedef.flatten_up_to(tree)
+        out: List[jax.Array] = []
+        for b in self.buckets:
+            lead = tuple(leaves[b.slots[0].leaf].shape[:self.lead_axes])
+            parts = [leaves[s.leaf].reshape(lead + (s.size,))
+                     for s in b.slots]
+            flat = parts[0] if len(parts) == 1 \
+                else jnp.concatenate(parts, axis=-1)
+            if b.shape != (b.size,):
+                pad = b.padded_size - b.size
+                if pad:
+                    flat = jnp.pad(flat, [(0, 0)] * len(lead) + [(0, pad)])
+                flat = flat.reshape(lead + b.shape)
+            out.append(flat)
+        return out
+
+    def unpack(self, buckets) -> Any:
+        """Inverse of :meth:`pack` (padding stripped)."""
+        leaves: List[Any] = [None] * self.n_leaves
+        for b, arr in zip(self.buckets, buckets):
+            lead = tuple(arr.shape[:arr.ndim - len(b.shape)])
+            flat = arr.reshape(lead + (b.padded_size,))
+            for s in b.slots:
+                piece = jax.lax.slice_in_dim(flat, s.offset,
+                                             s.offset + s.size, axis=-1)
+                leaves[s.leaf] = piece.reshape(lead + s.shape)
+        return self.treedef.unflatten(leaves)
+
+
+# --------------------------------------------------------------------- #
+# the Bucketed reducer wrapper
+# --------------------------------------------------------------------- #
+
+def _signature(tree, lead_axes: int):
+    leaves, treedef = jax.tree.flatten(tree)
+    return (treedef, lead_axes,
+            tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
+                  for l in leaves))
+
+
+class Bucketed(Reducer):
+    """Run any comm/ Reducer on packed buckets instead of raw leaves.
+
+    The wrapped reducer's codec is unchanged — it simply sees n_buckets
+    flat (or, for ``wants_matrix`` reducers like PowerSGD, near-square)
+    leaves instead of n_leaves ragged ones.  Stateful reducers carry their
+    EF/warm-start state in bucket space; ``init_state`` must therefore be
+    built from the same layout the round uses (``compress`` checks).
+    """
+
+    name = "bucketed"
+
+    def __init__(self, inner: Reducer, bucket_bytes: Optional[int] = None):
+        """``bucket_bytes=None`` means "inherit": the layout uses
+        DEFAULT_BUCKET_BYTES until plan resolution (core/plan.py
+        apply_bucketing) re-caps the wrapper with the plan's
+        ``HierAvgParams.bucket_bytes`` — so an explicit ``:bucketed``
+        spec modifier still honors the config knob."""
+        if isinstance(inner, Bucketed):
+            inner = inner.inner
+        if bucket_bytes is not None and bucket_bytes < 0:
+            raise ValueError(
+                f"bucket_bytes must be >= 0, got {bucket_bytes}")
+        self.inner = inner
+        self.bucket_bytes = None if bucket_bytes is None \
+            else int(bucket_bytes)
+        self.stateful = inner.stateful
+        self._layouts: Dict[Any, BucketLayout] = {}
+
+    @property
+    def effective_bucket_bytes(self) -> int:
+        return DEFAULT_BUCKET_BYTES if self.bucket_bytes is None \
+            else self.bucket_bytes
+
+    # -- layout ---------------------------------------------------------- #
+
+    def layout_for(self, tree, lead_axes: int = N_LEARNER_AXES
+                   ) -> BucketLayout:
+        """The (cached) layout for this tree signature — shapes and dtypes
+        are static under jit, so this is trace-time work only."""
+        key = _signature(tree, lead_axes)
+        lay = self._layouts.get(key)
+        if lay is None:
+            lay = BucketLayout.build(
+                tree, bucket_bytes=self.effective_bucket_bytes,
+                lead_axes=lead_axes,
+                matrix=getattr(self.inner, "wants_matrix", False))
+            self._layouts[key] = lay
+        return lay
+
+    def _check_state(self, lay: BucketLayout, state, lead: Tuple[int, ...]):
+        refs = getattr(state, "ref", None)
+        if refs is None:
+            return
+        got = [tuple(r.shape) for r in jax.tree.leaves(refs)]
+        want = [lead + b.shape for b in lay.buckets]
+        if got != want:
+            raise ValueError(
+                "bucketed reducer state does not match the bucket layout "
+                f"(state buckets {got}, layout wants {want}); build the "
+                "initial state with init_state(..., plan=...) using the "
+                "same plan/bucket_bytes the round was built with")
+
+    # -- carried state --------------------------------------------------- #
+
+    def init_state(self, params):
+        lay = self.layout_for(params)
+        return self.inner.init_state(lay.pack(params))
+
+    # -- codec ----------------------------------------------------------- #
+
+    def compress(self, tree, state):
+        lay = self.layout_for(tree)
+        buckets = lay.pack(tree)
+        if self.stateful:
+            lead = tuple(jax.tree.leaves(tree)[0].shape[:lay.lead_axes])
+            self._check_state(lay, state, lead)
+        return self.inner.compress(buckets, state)
+
+    def decompress(self, payload, like, state):
+        lay = self.layout_for(like)
+        # the reconstruction stays in bucket space: the grouped mean that
+        # follows (core/topology.py) is elementwise over the lead axes, so
+        # it averages buckets exactly as it would leaves
+        return self.inner.decompress(payload, lay.pack(like), state)
+
+    def finalize(self, avg_tree, orig_tree, state):
+        lay = self.layout_for(orig_tree)
+        out, state = self.inner.finalize(avg_tree, lay.pack(orig_tree),
+                                         state)
+        return lay.unpack(out), state
+
+    # -- accounting ------------------------------------------------------ #
+
+    def payload_bytes(self, tree) -> int:
+        lay = self.layout_for(tree, lead_axes=0)
+        return self.inner.payload_bytes(lay.bucket_structs())
+
+    def n_messages(self, tree) -> int:
+        """Grouped collectives per reduction: one per bucket, not per
+        leaf."""
+        return self.layout_for(tree, lead_axes=0).n_buckets
+
+    def _describe(self) -> str:
+        return f"{self.inner.describe()}:bucketed"

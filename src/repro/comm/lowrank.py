@@ -67,6 +67,12 @@ class PowerSGDReducer(Reducer):
 
     name = "powersgd"
     stateful = True
+    # NOT bucketed by default: the low-rank codec exploits each weight
+    # matrix's own row/column structure, which flat packing destroys.
+    # Explicit "powersgd:<r>:bucketed" still works — wants_matrix makes
+    # the layout pack near-square [a, b] buckets the codec can factorize.
+    bucket_by_default = False
+    wants_matrix = True
 
     def __init__(self, rank: int = 2):
         if rank < 1:
@@ -95,7 +101,8 @@ class PowerSGDReducer(Reducer):
                     jnp.float32))
             else:
                 qs.append(())
-        return LowRankState(ref=params, err=err,
+        # fresh buffers for ref (see comm/sparse.py: donation aliasing)
+        return LowRankState(ref=jax.tree.map(jnp.copy, params), err=err,
                             q=treedef.unflatten(qs))
 
     def compress(self, tree, state: LowRankState):
@@ -141,8 +148,10 @@ class PowerSGDReducer(Reducer):
     def finalize(self, avg_tree, orig_tree, state: LowRankState):
         out = jax.tree.map(lambda a, o: a.astype(o.dtype),
                            avg_tree, orig_tree)
-        # the averaged result is every learner's next reference
-        return out, state._replace(ref=out)
+        # next reference, copied so output params/ref never share a
+        # buffer under donation (see comm/sparse.py finalize)
+        ref = jax.tree.map(jnp.copy, out)
+        return out, state._replace(ref=ref)
 
     def payload_bytes(self, tree) -> int:
         total = 0
@@ -156,7 +165,7 @@ class PowerSGDReducer(Reducer):
             total += per_learner_size_dense(leaf)
         return int(total)
 
-    def describe(self) -> str:
+    def _describe(self) -> str:
         return f"powersgd:{self.rank}"
 
 

@@ -44,6 +44,7 @@ class QInt8Reducer(Reducer):
     """int8 payload with per-block fp32 scales; averaging in fp32."""
 
     name = "qint8"
+    bucket_by_default = True
 
     def __init__(self, block: int = 256):
         if block < 1:
@@ -80,5 +81,5 @@ class QInt8Reducer(Reducer):
             total += n + (-(-n // self.block)) * 4
         return int(total)
 
-    def describe(self) -> str:
+    def _describe(self) -> str:
         return f"qint8:{self.block}"

@@ -60,6 +60,21 @@ class Reducer:
 
     name = "mean"
     stateful = False
+    # -- bucketing hints (comm/bucket.py) -------------------------------- #
+    # wrap this reducer in Bucketed automatically when the plan's
+    # bucket_bytes knob is on?  True for coordinate-wise codecs (cast /
+    # topk / randk / qint8) where packing only helps; False for the dense
+    # mean (already one fused collective's worth of work per leaf, and
+    # per-leaf is the bit-exactness reference) and for reducers whose
+    # codec exploits per-leaf structure (PowerSGD) — those opt in via the
+    # ":bucketed" spec modifier.
+    bucket_by_default = False
+    # instance-level opt-out set by the ":perleaf" spec modifier
+    # (comm/__init__.py get_reducer); plan resolution respects it
+    bucket_opt_out = False
+    # pack buckets as near-square matrices instead of flat vectors (what a
+    # low-rank codec needs to act on a bucket at all)
+    wants_matrix = False
 
     # -- carried state -------------------------------------------------- #
     def init_state(self, params) -> Any:
@@ -85,7 +100,20 @@ class Reducer:
         return int(sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
                        for leaf in jax.tree.leaves(tree)))
 
+    def n_messages(self, tree) -> int:
+        """Grouped collectives one reduction dispatches (single-learner
+        tree): one per leaf on the per-leaf path; Bucketed overrides with
+        one per bucket."""
+        return len(jax.tree.leaves(tree))
+
     def describe(self) -> str:
+        """Spec string this reducer round-trips through ``get_reducer``;
+        subclasses override :meth:`_describe`, the ":perleaf" suffix is
+        appended here."""
+        return self._describe() + (":perleaf" if self.bucket_opt_out
+                                   else "")
+
+    def _describe(self) -> str:
         return self.name
 
     def __repr__(self) -> str:
@@ -106,6 +134,7 @@ class CastReducer(Reducer):
     """
 
     name = "cast"
+    bucket_by_default = True
 
     def __init__(self, dtype=jnp.bfloat16):
         self.payload_dtype = jnp.dtype(dtype)
@@ -131,7 +160,7 @@ class CastReducer(Reducer):
         return int(sum(leaf.size * self.payload_dtype.itemsize
                        for leaf in jax.tree.leaves(tree)))
 
-    def describe(self) -> str:
+    def _describe(self) -> str:
         return f"cast:{self.payload_dtype.name}"
 
 

@@ -54,6 +54,9 @@ class _SparseEFReducer(Reducer):
     """Shared machinery for top-k / random-k; subclasses pick the support."""
 
     stateful = True
+    # bucketed by default: k-of-the-bucket approximates the global
+    # k-of-the-model selection the EF analyses assume (comm/bucket.py)
+    bucket_by_default = True
 
     def __init__(self, ratio: float = 0.1, impl: str = "xla"):
         if not 0.0 < ratio <= 1.0:
@@ -68,7 +71,10 @@ class _SparseEFReducer(Reducer):
     def init_state(self, params) -> EFState:
         err = jax.tree.map(
             lambda x: jnp.zeros(x.shape, jnp.float32), params)
-        return EFState(ref=params, err=err, key=jax.random.PRNGKey(0))
+        # ref gets its OWN buffers: aliasing the params would make a
+        # donated TrainState donate the same buffer twice
+        ref = jax.tree.map(jnp.copy, params)
+        return EFState(ref=ref, err=err, key=jax.random.PRNGKey(0))
 
     def _select(self, delta2d, k: int, key):  # -> (vals, idx) per row
         raise NotImplementedError
@@ -103,15 +109,19 @@ class _SparseEFReducer(Reducer):
     def finalize(self, avg_tree, orig_tree, state: EFState):
         out = jax.tree.map(lambda a, o: a.astype(o.dtype),
                            avg_tree, orig_tree)
-        # the averaged result is every learner's next reference
-        return out, state._replace(ref=out)
+        # the averaged result is every learner's next reference; copied so
+        # the round's output params and ref never share a buffer (the
+        # TrainState is donated back on the next call — same double-
+        # donation hazard init_state documents)
+        ref = jax.tree.map(jnp.copy, out)
+        return out, state._replace(ref=ref)
 
     def payload_bytes(self, tree) -> int:
         # fp32 value + int32 index per transmitted coordinate
         return int(sum(self.k_for(leaf.size) * 8
                        for leaf in jax.tree.leaves(tree)))
 
-    def describe(self) -> str:
+    def _describe(self) -> str:
         return f"{self.name}:{self.ratio:g}"
 
 

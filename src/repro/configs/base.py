@@ -11,6 +11,10 @@ import json
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Tuple
 
+# the one definition of the default bucket cap (no circular import:
+# comm/ never imports configs/)
+from repro.comm.bucket import DEFAULT_BUCKET_BYTES
+
 
 @dataclass(frozen=True)
 class ParallelLayout:
@@ -62,6 +66,13 @@ class HierAvgParams:
     plan: ``k1`` = innermost period, ``k2`` = outermost); when unset, the
     legacy ``(k1, k2, reducer)`` trio builds the paper's 2-level plan
     bit-identically.
+
+    ``bucket_bytes`` caps the flat-buffer buckets compressed reducers pack
+    the pytree into before reducing (comm/bucket.py): compressed levels
+    run one grouped collective per bucket instead of per leaf, and sparse
+    reducers pick k globally per bucket.  ``0`` disables auto-bucketing
+    (reducers marked ``:bucketed`` in the spec still pack); the dense
+    ``mean`` is never auto-bucketed, so the default path is unchanged.
     """
 
     k1: int = 4          # innermost (local) averaging interval (SGD steps)
@@ -70,8 +81,12 @@ class HierAvgParams:
     # the topology's total learner count.
     reducer: str = "mean"  # reduction payload spec, e.g. "topk:0.1" (comm/)
     plan: Optional[str] = None  # N-level plan spec; wins over k1/k2/reducer
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES
 
     def __post_init__(self):
+        if self.bucket_bytes < 0:
+            raise ValueError(
+                f"bucket_bytes must be >= 0, got {self.bucket_bytes}")
         if self.plan is not None:
             # lazy import: core.plan owns parsing; this validates level
             # names, reducer specs, and period/axes nesting at build time
@@ -97,11 +112,16 @@ class HierAvgParams:
 
     @property
     def resolved_plan(self):
-        """The ReductionPlan this config describes (parsed fresh)."""
-        from repro.core.plan import ReductionPlan
+        """The ReductionPlan this config describes (parsed fresh), with
+        ``bucket_bytes`` bucketing applied — identical to what
+        ``resolve_plan(self)`` gives the round builders, so comm state
+        initialized from it always matches."""
+        from repro.core.plan import ReductionPlan, apply_bucketing
         if self.plan is not None:
-            return ReductionPlan.parse(self.plan)
-        return ReductionPlan.from_k1_k2(self.k1, self.k2, self.reducer)
+            p = ReductionPlan.parse(self.plan)
+        else:
+            p = ReductionPlan.from_k1_k2(self.k1, self.k2, self.reducer)
+        return apply_bucketing(p, self.bucket_bytes)
 
     @property
     def batch_dims(self) -> Tuple[int, ...]:

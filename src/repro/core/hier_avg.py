@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from repro.comm import Reducer, reduce_with
 from repro.configs.base import HierAvgParams
 from repro.core.plan import (PlanLike, ReductionLevel, ReductionPlan,
-                             init_comm_state, resolve_plan)
+                             apply_bucketing, init_comm_state, resolve_plan)
 from repro.core.topology import HierTopology, average_over, stack_like
 from repro.optim import Optimizer
 
@@ -47,24 +47,42 @@ class TrainState(NamedTuple):
 
 def init_state(topo: HierTopology, init_fn, optimizer: Optimizer, key,
                reducer: Optional[Reducer] = None,
-               plan: PlanLike = None) -> TrainState:
+               plan: PlanLike = None,
+               bucket_bytes: Optional[int] = None) -> TrainState:
     """All learners start from the same w_1 (paper's initialization).
 
     ``plan`` (or legacy ``reducer``) must match what the round/step
     function was built with: stateful reducers carry per-level state in
     ``comm_state`` keyed by level name.  Passing only ``reducer`` builds
     the default 2-level (local/global) state for it.
+
+    Bucketing must agree with the round builder's ``resolve_plan``
+    (comm/bucket.py): a ``plan`` given as a spec string, or a bare
+    ``reducer``, gets the same default bucketing a default
+    ``HierAvgParams`` resolves to; pass ``bucket_bytes`` (0 = per-leaf)
+    when the round uses a non-default ``HierAvgParams.bucket_bytes``.  A
+    ``ReductionPlan`` *instance* is taken as already resolved (e.g.
+    ``hier.resolved_plan``) unless ``bucket_bytes`` is given explicitly.
     """
+    from repro.comm import DEFAULT_BUCKET_BYTES
     params1 = init_fn(key)
     params = stack_like(topo, params1)
     opt_state = optimizer.init(params)
     if plan is not None:
-        p = plan if isinstance(plan, ReductionPlan) \
-            else ReductionPlan.parse(plan)
+        if isinstance(plan, ReductionPlan):
+            p = plan if bucket_bytes is None \
+                else apply_bucketing(plan, bucket_bytes)
+        else:
+            p = apply_bucketing(
+                ReductionPlan.parse(plan),
+                DEFAULT_BUCKET_BYTES if bucket_bytes is None
+                else bucket_bytes)
         comm_state = init_comm_state(p, params)
     elif reducer is not None:
         comm_state = init_comm_state(
-            ReductionPlan.from_k1_k2(1, 1, reducer), params)
+            apply_bucketing(ReductionPlan.from_k1_k2(1, 1, reducer),
+                            DEFAULT_BUCKET_BYTES if bucket_bytes is None
+                            else bucket_bytes), params)
     else:
         comm_state = ()
     return TrainState(params, opt_state, jnp.zeros((), jnp.int32),
@@ -243,22 +261,20 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
     identical to the round API; useful when periods change adaptively
     between rounds (core/schedules.py AdaptivePlan).
 
-    Reducers apply here too (compress runs every step; the result and the
-    level's comm state are masked in only on that level's reduction
-    steps).  The total-period equivalence with ``make_hier_round`` is
-    exact for dense/stateless reducers
-    (tests/test_plan.py::test_step_api_matches_round_api_3level); for
-    error-feedback reducers the round API reduces inner levels at outer
-    boundaries too (subsumed in time, not in the nest), so trajectories
-    differ by the compression of an already-averaged delta.
+    Each level's reduction sits under a ``lax.cond`` on its fire
+    predicate, so non-firing steps skip the compress AND the grouped
+    collective entirely (they used to run every step and be masked out
+    with ``jnp.where`` — paying the full wire and kernel bill K2 times
+    per round instead of the plan's billable counts).  The total-period
+    equivalence with ``make_hier_round`` is exact for dense/stateless
+    reducers (tests/test_plan.py::test_step_api_matches_round_api_3level);
+    for error-feedback reducers the round API reduces inner levels at
+    outer boundaries too (subsumed in time, not in the nest), so
+    trajectories differ by the compression of an already-averaged delta.
     """
     sgd_step = make_sgd_step(loss_fn, optimizer)
     p = resolve_plan(hier, reducer, plan)
     last = len(p.levels) - 1
-
-    def blend(new_tree, old_tree, mask):
-        return jax.tree.map(
-            lambda a, b: jnp.where(mask, a, b), new_tree, old_tree)
 
     def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
         state, metrics = sgd_step(state, batch)
@@ -274,12 +290,18 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
             avg_fn = (lambda lv: lambda tree, cf=None: average_over(
                 tree, lv.axes, cf))(level)
             lvl_cs = cs[level.name] if level.reducer.stateful else ()
-            red_p, red_cs = reduce_with(level.reducer, avg_fn, params,
-                                        lvl_cs, constraint_fn)
-            params = blend(red_p, params, fire)
+
+            def reduce_branch(operand, level=level, avg_fn=avg_fn):
+                pp, lcs = operand
+                return reduce_with(level.reducer, avg_fn, pp, lcs,
+                                   constraint_fn)
+
+            params, lvl_cs = jax.lax.cond(
+                fire, reduce_branch, lambda operand: operand,
+                (params, lvl_cs))
             if level.reducer.stateful:
                 cs = dict(cs)
-                cs[level.name] = blend(red_cs, lvl_cs, fire)
+                cs[level.name] = lvl_cs
         return state._replace(params=params, comm_state=cs), metrics
 
     return step

@@ -23,7 +23,8 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Tuple, Union
 
-from repro.comm import Reducer, get_reducer
+from repro.comm import (DEFAULT_BUCKET_BYTES, Bucketed, Reducer,
+                        get_reducer)
 from repro.core.topology import (GLOBAL_ARRAY_AXES, LOCAL_ARRAY_AXES,
                                  POD_ARRAY_AXES)
 
@@ -201,13 +202,49 @@ class ReductionPlan:
         return f"ReductionPlan({self.describe()})"
 
 
+def apply_bucketing(plan: ReductionPlan, bucket_bytes: int
+                    ) -> ReductionPlan:
+    """Wrap each level's reducer in :class:`~repro.comm.Bucketed`
+    (comm/bucket.py) so it compresses and all-reduces size-capped flat
+    buckets instead of raw leaves.
+
+    Applied per level: reducers opted out (``:perleaf``) stay per-leaf,
+    ``bucket_by_default`` codecs (cast / topk / randk / qint8) are
+    wrapped automatically, and reducers already wrapped (the
+    ``:bucketed`` spec modifier) keep their wrapper but inherit this
+    ``bucket_bytes`` cap unless they were built with an explicit one —
+    so the config knob governs explicit markers too.  The dense mean and
+    PowerSGD keep per-leaf semantics unless explicitly marked.
+    ``bucket_bytes <= 0`` disables auto-wrapping (explicit ``:bucketed``
+    markers still apply, at their own/default cap).
+    """
+    levels, changed = [], False
+    for lvl in plan.levels:
+        r = lvl.reducer
+        if (isinstance(r, Bucketed) and r.bucket_bytes is None
+                and bucket_bytes and bucket_bytes > 0
+                and bucket_bytes != r.effective_bucket_bytes):
+            lvl = replace(lvl, reducer=Bucketed(r.inner, bucket_bytes))
+            changed = True
+        elif (bucket_bytes and bucket_bytes > 0
+                and not isinstance(r, Bucketed) and r.bucket_by_default
+                and not r.bucket_opt_out):
+            lvl = replace(lvl, reducer=Bucketed(r, bucket_bytes))
+            changed = True
+        levels.append(lvl)
+    return ReductionPlan(tuple(levels)) if changed else plan
+
+
 def resolve_plan(hier, reducer=None, plan: PlanLike = None) -> ReductionPlan:
     """The plan a round/step builder actually uses.
 
     Precedence: explicit ``plan`` argument (instance or spec string), then
     ``hier.plan``, then the legacy 2-level plan from ``hier.k1``/``hier.k2``.
     An explicit ``reducer`` (spec or instance) overrides the reducer of
-    EVERY level — the legacy single-reducer behavior.
+    EVERY level — the legacy single-reducer behavior.  Finally
+    ``hier.bucket_bytes`` buckets compressed levels (:func:`apply_bucketing`)
+    so round builders, state init, and payload accounting all agree on the
+    packed layout.
     """
     if plan is None:
         plan = getattr(hier, "plan", None)
@@ -220,7 +257,8 @@ def resolve_plan(hier, reducer=None, plan: PlanLike = None) -> ReductionPlan:
         p = ReductionPlan.parse(plan)
     if reducer is not None:
         p = p.with_reducer(reducer)
-    return p
+    return apply_bucketing(
+        p, getattr(hier, "bucket_bytes", DEFAULT_BUCKET_BYTES))
 
 
 def init_comm_state(plan: ReductionPlan, params):

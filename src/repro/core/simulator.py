@@ -92,7 +92,9 @@ class Simulator:
                 "global", LEVEL_AXES["global"], 1, self.reducer),))
         else:
             raise ValueError(algo)
-        self.round_fn = jax.jit(rnd)
+        # donate the carried TrainState: params/opt_state/EF buffers update
+        # in place instead of doubling peak memory every round
+        self.round_fn = jax.jit(rnd, donate_argnums=(0,))
         self._eval = jax.jit(lambda p, b: self.loss_fn(p, b))
         self._gsq = jax.jit(self._grad_sq)
 

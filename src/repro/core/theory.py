@@ -177,17 +177,27 @@ class LevelCost:
     count_per_round: int     # reductions per round (outer-subsumed removed)
     bandwidth: float         # link tier this level rides (ICI or DCI)
     seconds_per_round: float
+    messages: int = 1        # grouped collectives dispatched per reduction
+                             # (per-leaf: n_leaves; bucketed: n_buckets)
 
 
-def param_template(n_params: int, dtype="bfloat16"):
+def param_template(n_params: int, dtype="bfloat16", n_leaves: int = 1):
     """A square-ish single-learner matrix standing in for the model's
     parameters — what ``Reducer.payload_bytes`` needs to size a level's
-    compressed wire cost analytically (2-D so low-rank reducers apply)."""
+    compressed wire cost analytically (2-D so low-rank reducers apply).
+
+    ``n_leaves > 1`` splits the budget into that many equal matrices —
+    use it when the per-message latency term matters (the single-leaf
+    default dispatches one collective on the per-leaf path too, so it
+    cannot show bucketing's message-count advantage)."""
     import jax
     import jax.numpy as jnp
-    side = max(1, int(round(n_params ** 0.5)))
-    return {"params": jax.ShapeDtypeStruct(
-        (side, -(-n_params // side)), jnp.dtype(dtype))}
+    per = max(1, n_params // n_leaves)
+    side = max(1, int(round(per ** 0.5)))
+    struct = jax.ShapeDtypeStruct((side, -(-per // side)), jnp.dtype(dtype))
+    if n_leaves == 1:
+        return {"params": struct}
+    return {f"params{i}": struct for i in range(n_leaves)}
 
 
 def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
@@ -202,6 +212,15 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
     aware-schedule convention, matching ``comm_per_k2_steps``'s
     "subsumed" accounting; see its docstring for the caveat that the
     scan-nest program still executes those inner reductions).
+
+    Latency is billed per dispatched collective (``Reducer.n_messages``):
+    the per-leaf path pays the ring's startup cost once per leaf, the
+    bucketed path (comm/bucket.py) once per bucket — the wire-bytes term
+    is message-count independent.  The term only differentiates the two
+    paths when ``template`` has a realistic leaf structure (real param
+    trees, or ``param_template(..., n_leaves=...)``); the default
+    single-leaf template dispatches one message either way, since buckets
+    never split a leaf.
     """
     cm = cm or CommModel()
     counts = dict(plan.counts_per_round())
@@ -211,11 +230,15 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
         for a in lvl.axes:
             n *= topo.shape[a]
         payload = lvl.reducer.payload_bytes(template)
+        messages = lvl.reducer.n_messages(template)
         bw = cm.bw_for_level(lvl.axes, topo.pods)
         count = counts[lvl.name]
-        secs = count * cm.allreduce_time(payload, n, bw)
+        # one fused message's bill + the extra per-message ring startups
+        per_reduction = cm.allreduce_time(payload, n, bw) \
+            + (messages - 1) * 2 * (n - 1) * cm.latency
+        secs = count * per_reduction
         out.append(LevelCost(lvl.name, n, lvl.period, payload, count, bw,
-                             secs))
+                             secs, messages))
     return tuple(out)
 
 

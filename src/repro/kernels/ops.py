@@ -36,9 +36,23 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 def topk_compress(x, k: int, *, impl: str = "xla",
                   block_n: int = 1024) -> Tuple[jax.Array, jax.Array]:
     """Dispatchable magnitude top-k selection: x [rows, n] ->
-    (values [rows, k], indices [rows, k] int32, ascending per row)."""
+    (values [rows, k], indices [rows, k] int32, ascending per row).
+
+    With bucketed reductions (comm/bucket.py) a row is one whole flat
+    bucket per learner — one tiled kernel pass instead of a ragged launch
+    per leaf.  The Pallas kernel accumulates indices through an fp32
+    matmul compaction, so rows are capped at 2**24 elements; keep
+    ``HierAvgParams.bucket_bytes`` at/below the 4 MiB default (1M fp32
+    elements, which also fits a row in VMEM) when targeting it.
+    """
     if impl == "xla":
         return kref.topk_compress_ref(x, k)
+    n = x.shape[-1]
+    if n >= 2 ** 24:
+        raise ValueError(
+            f"pallas topk_compress rows are capped at 2**24 elements "
+            f"(fp32 index compaction), got n={n}; lower "
+            f"HierAvgParams.bucket_bytes or use impl='xla'")
     from repro.kernels.topk_compress import topk_compress as tk
     return tk(x, k, block_n=block_n,
               interpret=(impl == "pallas_interpret"))

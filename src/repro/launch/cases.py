@@ -100,16 +100,32 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
     # the params' specs — learner axes AND trailing fsdp/tp shards; PRNG
     # keys stay replicated, and PowerSGD's warm Q shards over the learner
     # axes only (its trailing [b, rank] dims are tiny)
+    params_treedef = jax.tree_util.tree_structure(state_struct.params)
+
+    def stacked_specs(tree):
+        """Learner axes sharded, trailing dims replicated — the fallback
+        for state trees that do NOT mirror the params (bucket-space EF
+        from comm/bucket.py: [pods, G, S, n] packed buckets)."""
+        return jax.tree.map(
+            lambda leaf: safe_pspec(
+                P(*(("pod", "group", "local")
+                    + (None,) * (leaf.ndim - 3))), leaf.shape, mesh),
+            tree)
+
     def level_comm_specs(cs):
         if isinstance(cs, EFState):
-            return EFState(ref=pspecs, err=pspecs, key=P())
+            mirrors = (jax.tree_util.tree_structure(cs.ref)
+                       == params_treedef)
+            specs = pspecs if mirrors else stacked_specs(cs.ref)
+            err_specs = pspecs if mirrors else stacked_specs(cs.err)
+            return EFState(ref=specs, err=err_specs, key=P())
         if isinstance(cs, LowRankState):
-            q_specs = jax.tree.map(
-                lambda leaf: safe_pspec(
-                    P(*(("pod", "group", "local")
-                        + (None,) * (leaf.ndim - 3))), leaf.shape, mesh),
-                cs.q)
-            return LowRankState(ref=pspecs, err=pspecs, q=q_specs)
+            q_specs = stacked_specs(cs.q)
+            mirrors = (jax.tree_util.tree_structure(cs.ref)
+                       == params_treedef)
+            specs = pspecs if mirrors else stacked_specs(cs.ref)
+            err_specs = pspecs if mirrors else stacked_specs(cs.err)
+            return LowRankState(ref=specs, err=err_specs, q=q_specs)
         return jax.tree.map(lambda leaf: P(), cs)
 
     if isinstance(state_struct.comm_state, dict):
@@ -150,10 +166,26 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
                                        pspecs, is_leaf=lambda x:
                                        isinstance(x, P))
 
+        def pin_learner_axes(leaf):
+            """Generic re-pin for trees that do NOT mirror the params
+            (bucket-space reductions, comm/bucket.py): learner axes
+            sharded, trailing bucket dims replicated."""
+            if getattr(leaf, "ndim", 0) < 3:
+                return leaf
+            spec = safe_pspec(
+                P(*(("pod", "group", "local")
+                    + (None,) * (leaf.ndim - 3))), leaf.shape, mesh)
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, spec))
+
         def constraint_fn(tree):
             try:
                 return jax.tree.map(jax.lax.with_sharding_constraint, tree,
                                     param_shardings)
+            except Exception:
+                pass
+            try:
+                return jax.tree.map(pin_learner_axes, tree)
             except Exception:
                 return tree
 

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
+from repro.comm import DEFAULT_BUCKET_BYTES
 from repro.configs import HierAvgParams, get_config
 from repro.core import (HierTopology, init_state, make_hier_round,
                         unstack_first)
@@ -47,6 +48,10 @@ def main() -> None:
                     help="N-level reduction plan spec, e.g. "
                          "'local@4:cast:bfloat16/pod@8/global@16:topk:0.05'"
                          " — wins over --k1/--k2/--reducer")
+    ap.add_argument("--bucket-bytes", type=int,
+                    default=DEFAULT_BUCKET_BYTES,
+                    help="flat-buffer bucket cap for compressed reducers "
+                         "(comm/bucket.py); 0 = per-leaf reductions")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -58,7 +63,7 @@ def main() -> None:
     topo = HierTopology(pods=1, groups=args.learners // args.s,
                         local=args.s)
     hier = HierAvgParams(k1=args.k1, k2=args.k2, reducer=args.reducer,
-                         plan=args.plan)
+                         plan=args.plan, bucket_bytes=args.bucket_bytes)
     plan = hier.resolved_plan
     bundle = build(cfg)
     optimizer = sgd(step_decay_lr(
@@ -71,7 +76,10 @@ def main() -> None:
 
     loader = HierDataLoader(sample, topo=topo, hier=hier,
                             per_learner_batch=args.batch, seed=args.seed)
-    round_fn = jax.jit(make_hier_round(bundle.loss_fn, optimizer, hier))
+    # donate the carried TrainState (params/opt_state/EF update in place —
+    # no doubled peak memory); the loop only ever uses the returned state
+    round_fn = jax.jit(make_hier_round(bundle.loss_fn, optimizer, hier),
+                       donate_argnums=(0,))
     state = init_state(topo, bundle.init, optimizer, key, plan=plan)
 
     print(f"Hier-AVG: {topo.describe()}  plan={plan.describe()} "

@@ -1,0 +1,323 @@
+"""Bucketed flat-buffer reductions (comm/bucket.py): layout construction,
+pack/unpack round-trips (property-tested over dtype-mixed pytrees and
+model-zoo param shapes), bit-exactness of bucketed mean/cast vs the
+per-leaf path across a 3-level plan, the global-k topk oracle, and the
+layout-checked EF state init."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (Bucketed, BucketLayout, EFState, get_reducer,
+                        reduce_with)
+from repro.configs.base import HierAvgParams
+from repro.core import (HierTopology, Simulator, global_average, init_state,
+                        make_hier_round, resolve_plan)
+from repro.core.topology import stack_like
+from repro.optim import sgd
+
+TOPO = HierTopology(1, 2, 2)
+
+
+def _mixed_tree(topo=TOPO):
+    key = jax.random.PRNGKey(0)
+    mk = lambda i, s, d=jnp.float32: jax.random.normal(  # noqa: E731
+        jax.random.fold_in(key, i), topo.shape + s).astype(d)
+    return {
+        "w0": mk(0, (6, 5)),
+        "b0": mk(1, (7,)),
+        "h": mk(2, (3, 4, 2), jnp.bfloat16),
+        "scalar": mk(3, ()),
+        "w1": mk(4, (8, 3), jnp.bfloat16),
+    }
+
+
+# ------------------------------ layout -------------------------------- #
+
+def test_layout_groups_by_dtype_and_caps_size():
+    tree = _mixed_tree()
+    lay = BucketLayout.build(tree)        # uncapped in practice (4 MiB)
+    assert lay.n_leaves == 5
+    by_dtype = {b.dtype: b for b in lay.buckets}
+    assert set(by_dtype) == {"float32", "bfloat16"}
+    assert by_dtype["float32"].size == 6 * 5 + 7 + 1
+    assert by_dtype["bfloat16"].size == 3 * 4 * 2 + 8 * 3
+    # a tight cap splits the float32 group; leaves are never split, and an
+    # over-cap leaf (w0: 30 elements > 8-element cap) gets its own bucket
+    # (dict leaves flatten in sorted key order: b0, scalar, w0)
+    tight = BucketLayout.build(tree, bucket_bytes=8 * 4)
+    f32 = [b for b in tight.buckets if b.dtype == "float32"]
+    assert [b.size for b in f32] == [8, 30]
+    # slots record exact offsets within their bucket
+    assert [(s.offset, s.size) for s in f32[0].slots] == [(0, 7), (7, 1)]
+    assert f32[1].slots[0].size == 30
+
+
+def test_pack_unpack_roundtrip_mixed_dtypes():
+    tree = _mixed_tree()
+    for bucket_bytes in (0, 16, 4 << 20):
+        lay = BucketLayout.build(tree, bucket_bytes=bucket_bytes)
+        back = lay.unpack(lay.pack(tree))
+        for k in tree:
+            assert back[k].dtype == tree[k].dtype
+            np.testing.assert_array_equal(np.asarray(back[k]),
+                                          np.asarray(tree[k]))
+
+
+def test_matrix_mode_pads_and_roundtrips():
+    tree = _mixed_tree()
+    lay = BucketLayout.build(tree, matrix=True)
+    for b in lay.buckets:
+        assert len(b.shape) == 2 and b.padded_size >= b.size
+    back = lay.unpack(lay.pack(tree))
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_model_zoo_param_shapes_roundtrip():
+    """Real model-zoo param pytrees (reduced configs, eval_shape only — no
+    arrays) survive pack/unpack with shapes and dtypes intact."""
+    from repro.configs import get_config
+    from repro.models import build
+    for arch in ("hymba-1.5b", "deepseek-v2-lite-16b"):
+        bundle = build(get_config(arch).reduced())
+        params1 = jax.eval_shape(bundle.init,
+                                 jax.ShapeDtypeStruct((2,), jnp.uint32))
+        params = jax.eval_shape(lambda p: stack_like(TOPO, p), params1)
+        lay = BucketLayout.build(params)
+        assert lay.n_buckets < lay.n_leaves
+        out = jax.eval_shape(lambda t: lay.unpack(lay.pack(t)), params)
+        assert (jax.tree.map(lambda l: (l.shape, l.dtype), out)
+                == jax.tree.map(lambda l: (l.shape, l.dtype), params))
+
+
+# --------------------- hypothesis property tests ---------------------- #
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    _HYP = True
+
+    leaf_shapes = st.lists(
+        st.tuples(st.sampled_from([(3,), (2, 4), (5,), (1, 2, 3), ()]),
+                  st.sampled_from(["float32", "bfloat16", "float16"])),
+        min_size=1, max_size=6)
+
+    @settings(deadline=None, max_examples=25)
+    @given(leaf_shapes, st.integers(0, 64),
+           st.tuples(st.integers(1, 2), st.integers(1, 2),
+                     st.integers(1, 3)))
+    def test_property_pack_unpack_roundtrip(leaves, cap, topo_shape):
+        tree = {}
+        for i, (shape, dtype) in enumerate(leaves):
+            n = int(np.prod(topo_shape + shape)) if shape \
+                else int(np.prod(topo_shape))
+            tree[f"l{i}"] = (jnp.arange(n, dtype=jnp.float32)
+                             .reshape(topo_shape + shape)
+                             .astype(dtype))
+        lay = BucketLayout.build(tree, bucket_bytes=cap)
+        back = lay.unpack(lay.pack(tree))
+        for k in tree:
+            assert back[k].dtype == tree[k].dtype
+            np.testing.assert_array_equal(np.asarray(back[k]),
+                                          np.asarray(tree[k]))
+        # every element lands in exactly one slot of one bucket
+        assert sum(b.size for b in lay.buckets) \
+            == sum(int(np.prod(topo_shape + s)) // int(np.prod(topo_shape))
+                   for s, _ in leaves)
+except ImportError:                                   # pragma: no cover
+    _HYP = False
+
+
+# ----------------------- bucketed reducer parity ---------------------- #
+
+def test_bucketed_mean_and_cast_bit_identical_single_reduction():
+    tree = _mixed_tree()
+    for spec in ("mean", "cast:bfloat16"):
+        per_leaf, _ = reduce_with(get_reducer(spec), global_average,
+                                  tree, ())
+        bucketed, _ = reduce_with(Bucketed(get_reducer(spec)),
+                                  global_average, tree, ())
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(bucketed[k]),
+                                          np.asarray(per_leaf[k]))
+
+
+def test_bucketed_cast_bit_identical_across_3level_plan(cls_task):
+    """Full-trajectory bit-exactness: a 3-level cast/mean plan trained
+    with bucketing on vs off (per-leaf) gives byte-identical params."""
+    spec = "local@2:cast:bfloat16/pod@4/global@8:cast:bfloat16"
+    topo = HierTopology(2, 1, 2)
+    kw = dict(topo=topo, optimizer=sgd(0.05), seed=2,
+              eval_batch=cls_task["eval_batch"], per_learner_batch=8)
+    bucketed = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                         cls_task["sample"],
+                         hier=HierAvgParams(plan=spec), **kw).run(3)
+    perleaf = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                        cls_task["sample"],
+                        hier=HierAvgParams(plan=spec, bucket_bytes=0),
+                        **kw).run(3)
+    np.testing.assert_array_equal(bucketed.losses, perleaf.losses)
+    for a, b in zip(jax.tree.leaves(bucketed.state.params),
+                    jax.tree.leaves(perleaf.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bucketed_topk_matches_flat_lax_topk_oracle():
+    """Global-k selection: the bucketed topk payload is exactly
+    lax.top_k over each learner's whole flattened (f32) model."""
+    topo = HierTopology(1, 1, 4)
+    key = jax.random.PRNGKey(3)
+    tree = {"a": jax.random.normal(key, topo.shape + (9, 3)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   topo.shape + (17,))}
+    red = Bucketed(get_reducer("topk:0.25"))
+    st = red.init_state(jax.tree.map(jnp.zeros_like, tree))  # ref=0
+    (vals, idx), = red.compress(tree, st)[0]
+    n = 9 * 3 + 17
+    k = max(1, round(0.25 * n))
+    assert vals.shape == (4, k)
+    flat = np.concatenate([np.asarray(tree["a"]).reshape(4, -1),
+                           np.asarray(tree["b"]).reshape(4, -1)], axis=-1)
+    want_vals, want_idx = jax.lax.top_k(jnp.abs(jnp.asarray(flat)), k)
+    for r in range(4):
+        assert set(np.asarray(idx)[r].tolist()) \
+            == set(np.asarray(want_idx)[r].tolist())
+        np.testing.assert_allclose(
+            np.sort(np.abs(np.asarray(vals)[r])),
+            np.sort(np.asarray(want_vals)[r]), rtol=1e-6)
+
+
+def test_bucketed_topk_3level_plan_trains_with_bucket_space_ef(cls_task):
+    """A 3-level plan with stateful EF reducers at two levels trains to
+    consensus with per-level EF state carried in bucket space."""
+    spec = "local@2:topk:0.5/pod@4/global@8:topk:0.25"
+    topo = HierTopology(2, 1, 2)
+    h = HierAvgParams(plan=spec)
+    plan = h.resolved_plan
+    opt = sgd(0.05)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    state = init_state(topo, cls_task["init_fn"], opt,
+                       jax.random.PRNGKey(0), plan=plan)
+    # EF state is bucket-space: one ref/err entry per bucket, not per leaf
+    n_leaves = len(jax.tree.leaves(state.params))
+    for name in ("local", "global"):
+        ef = state.comm_state[name]
+        assert isinstance(ef, EFState)
+        assert len(ef.ref) < n_leaves
+        assert all(r.ndim == 4 for r in ef.ref)    # [pods, G, S, n]
+    batch = cls_task["sample"](jax.random.PRNGKey(1),
+                               h.k2 * topo.n_learners * 8)
+    shaped = jax.tree.map(
+        lambda x: x.reshape(h.batch_dims + topo.shape + (8,)
+                            + x.shape[1:]), batch)
+    state, metrics = round_fn(state, shaped)
+    assert np.isfinite(float(metrics["loss"]))
+    for leaf in jax.tree.leaves(state.params):
+        flat = leaf.reshape((topo.n_learners,) + leaf.shape[3:])
+        assert bool(jnp.allclose(flat, flat[0:1], atol=1e-6))
+
+
+def test_layout_checked_init_rejects_mismatched_state(cls_task):
+    """Carrying per-leaf (or differently-bucketed) EF state into a
+    bucketed round fails loudly, not by silent misalignment."""
+    topo = HierTopology(1, 2, 2)
+    h = HierAvgParams(k1=2, k2=4, reducer="topk:0.25")
+    opt = sgd(0.05)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    # state built for the PER-LEAF pipeline (bucket_bytes=0)
+    bad = init_state(topo, cls_task["init_fn"], opt, jax.random.PRNGKey(0),
+                     plan=resolve_plan(
+                         HierAvgParams(k1=2, k2=4, reducer="topk:0.25",
+                                       bucket_bytes=0)))
+    batch = cls_task["sample"](jax.random.PRNGKey(1),
+                               h.k2 * topo.n_learners * 8)
+    shaped = jax.tree.map(
+        lambda x: x.reshape((h.beta, h.k1) + topo.shape + (8,)
+                            + x.shape[1:]), batch)
+    with pytest.raises((ValueError, TypeError)):
+        round_fn(bad, shaped)
+
+
+def test_explicit_bucketed_modifier_inherits_config_cap():
+    """A ':bucketed' spec modifier honors HierAvgParams.bucket_bytes (the
+    wrapper's cap is 'inherit' until plan resolution re-caps it)."""
+    h = HierAvgParams(k1=2, k2=4, reducer="topk:0.05:bucketed",
+                      bucket_bytes=64)
+    for lvl in resolve_plan(h).levels:
+        assert isinstance(lvl.reducer, Bucketed)
+        assert lvl.reducer.effective_bucket_bytes == 64
+    # with auto-bucketing off, the explicit marker stays at the default
+    h0 = HierAvgParams(k1=2, k2=4, reducer="topk:0.05:bucketed",
+                       bucket_bytes=0)
+    for lvl in resolve_plan(h0).levels:
+        assert isinstance(lvl.reducer, Bucketed)
+        assert lvl.reducer.effective_bucket_bytes == 4 << 20
+
+
+def test_init_state_spec_string_plan_matches_default_round(cls_task):
+    """init_state(plan=<spec string>) applies the same default bucketing
+    resolve_plan does, so a round built from a default HierAvgParams
+    accepts the state; bucket_bytes=0 rebuilds the per-leaf state."""
+    spec = "local@2:topk:0.5/global@4:topk:0.25"
+    topo = HierTopology(1, 2, 2)
+    h = HierAvgParams(plan=spec)
+    opt = sgd(0.05)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    state = init_state(topo, cls_task["init_fn"], opt,
+                       jax.random.PRNGKey(0), plan=spec)
+    batch = cls_task["sample"](jax.random.PRNGKey(1),
+                               h.k2 * topo.n_learners * 8)
+    shaped = jax.tree.map(
+        lambda x: x.reshape(h.batch_dims + topo.shape + (8,)
+                            + x.shape[1:]), batch)
+    state, metrics = round_fn(state, shaped)
+    assert np.isfinite(float(metrics["loss"]))
+    # explicit override routes to the per-leaf layout
+    perleaf = init_state(topo, cls_task["init_fn"], opt,
+                         jax.random.PRNGKey(0), plan=spec, bucket_bytes=0)
+    n_leaves = len(jax.tree.leaves(perleaf.params))
+    assert len(jax.tree.leaves(perleaf.comm_state["global"].ref)) \
+        == n_leaves
+    assert len(jax.tree.leaves(state.comm_state["global"].ref)) < n_leaves
+
+
+# ------------------------------ accounting ---------------------------- #
+
+def test_bucketed_payload_and_message_accounting():
+    tree = {"w": jnp.zeros((100, 10)), "b": jnp.zeros((10,)),
+            "v": jnp.zeros((77,))}
+    dense = get_reducer("mean")
+    assert dense.n_messages(tree) == 3
+    bucketed_cast = Bucketed(get_reducer("cast:bfloat16"))
+    # one f32 bucket -> one collective; payload bytes unchanged vs per-leaf
+    assert bucketed_cast.n_messages(tree) == 1
+    assert bucketed_cast.payload_bytes(tree) \
+        == get_reducer("cast:bfloat16").payload_bytes(tree)
+    # global k: one k of the whole model, not one per leaf
+    topk = Bucketed(get_reducer("topk:0.1"))
+    n = 100 * 10 + 10 + 77
+    assert topk.payload_bytes(tree) == max(1, round(0.1 * n)) * 8
+
+
+def test_plan_comm_costing_bills_messages():
+    from repro.core.theory import CommModel, plan_comm_per_round
+    tree = {"w": jax.ShapeDtypeStruct((100, 10), jnp.float32),
+            "b": jax.ShapeDtypeStruct((10,), jnp.float32)}
+    topo = HierTopology(1, 2, 4)
+    cm = CommModel()
+    per_leaf = plan_comm_per_round(
+        resolve_plan(HierAvgParams(k1=2, k2=4, reducer="qint8:128",
+                                   bucket_bytes=0)), topo, tree, cm)
+    bucketed = plan_comm_per_round(
+        resolve_plan(HierAvgParams(k1=2, k2=4, reducer="qint8:128")),
+        topo, tree, cm)
+    assert per_leaf[0].messages == 2 and bucketed[0].messages == 1
+    # no more wire bytes (packing saves partial qint8 blocks), strictly
+    # less startup latency
+    for pl, bk in zip(per_leaf, bucketed):
+        assert bk.payload_bytes <= pl.payload_bytes
+        assert bk.seconds_per_round < pl.seconds_per_round

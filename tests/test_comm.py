@@ -240,8 +240,13 @@ def test_step_api_with_reducer_keeps_consensus(cls_task):
     # feedback (the global reference is the last global consensus, not a
     # free ride on the dense local refs as before the ReductionPlan
     # refactor) its global coverage is only `ratio` of coordinates per
-    # round, so it needs a larger ratio / looser bar
-    ("randk:0.25", 0.03),
+    # round, so it needs a larger ratio / looser bar.  Bucketed (the
+    # default) draws ONE shared support over the whole flat model — the
+    # textbook random-k of Stich et al. — which loses the per-leaf
+    # stratification freebie (a small bias leaf can go unsampled for
+    # rounds, riding the EF residual), hence the wider bar vs ":perleaf".
+    ("randk:0.25", 0.05),
+    ("randk:0.25:perleaf", 0.03),
 ])
 def test_reducer_hier_avg_near_dense(cls_task, spec, tol):
     """Compressed Hier-AVG reaches near-dense eval accuracy."""

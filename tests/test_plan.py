@@ -72,11 +72,26 @@ def test_hier_params_plan_backfills_k1_k2():
 
 def test_resolve_plan_precedence():
     h = HierAvgParams(k1=2, k2=4, reducer="qint8:128")
+    # compressed reducers are bucketed by default (comm/bucket.py)
     p = resolve_plan(h)
-    assert p.describe() == "local@2:qint8:128/global@4:qint8:128"
-    # explicit reducer overrides every level (legacy single-reducer knob)
+    assert p.describe() == \
+        "local@2:qint8:128:bucketed/global@4:qint8:128:bucketed"
+    # bucket_bytes=0 pins the legacy per-leaf pipeline
+    h0 = HierAvgParams(k1=2, k2=4, reducer="qint8:128", bucket_bytes=0)
+    assert resolve_plan(h0).describe() == \
+        "local@2:qint8:128/global@4:qint8:128"
+    # ... as does the ":perleaf" spec modifier, per level
+    hp = HierAvgParams(k1=2, k2=4, reducer="qint8:128:perleaf")
+    assert resolve_plan(hp).describe() == \
+        "local@2:qint8:128:perleaf/global@4:qint8:128:perleaf"
+    # the dense mean is never auto-bucketed (default path unchanged)
+    assert resolve_plan(HierAvgParams(k1=2, k2=4)).describe() == \
+        "local@2:mean/global@4:mean"
+    # explicit reducer overrides every level (legacy single-reducer knob),
+    # then bucketing applies on top
     p2 = resolve_plan(h, reducer="cast:bfloat16")
-    assert all(l.reducer.describe() == "cast:bfloat16" for l in p2.levels)
+    assert all(l.reducer.describe() == "cast:bfloat16:bucketed"
+               for l in p2.levels)
     # explicit plan wins over the config
     p3 = resolve_plan(h, plan="local@1/pod@2/global@4")
     assert len(p3.levels) == 3
