@@ -1,19 +1,30 @@
-"""Per-leaf vs bucketed reduction A/B (comm/bucket.py).
+"""Per-leaf vs bucketed vs pipelined reduction A/B (comm/bucket.py).
 
-Three measurements per reducer variant on a deep (many-leaf) MLP:
+Two sections, both on 8 forced host devices (benchmarks/run.py sets
+``--xla_force_host_platform_device_count=8`` for ``--only bucketing``;
+this module does the same standalone):
 
-  * wall-clock per Hier-AVG round (Simulator, CPU),
-  * analytic per-learner payload bytes of one global reduction,
-  * grouped collectives per global reduction, counted from compiled HLO
-    (launch/hlo_analysis.py) of the reduction jitted over an 8-way
-    learner mesh — this needs >= 8 host devices
-    (``--xla_force_host_platform_device_count``, set by benchmarks/run.py
-    and by this module when run standalone); with fewer devices the
-    collective count is reported as 0 with a note.
+1. **Full training rounds** (Simulator, single device — the PR 3 rows):
+   wall-clock per Hier-AVG round, analytic per-learner payload bytes, and
+   grouped collectives per global reduction counted from the compiled
+   SPMD HLO.  The bucketed rows pin the serial schedule so they stay
+   comparable with the PR 3 snapshot.
 
-The headline claim: bucketing turns O(n_leaves) grouped collectives into
-O(n_buckets) per reduction at unchanged payload, with no wall-clock
-regression — and gives topk a global k-of-the-model selection.
+2. **Reduction-schedule A/B** (the tentpole rows): the jitted global
+   reduction of a 12-leaf/3 MB stacked tree over the 8-way learner mesh,
+   serial ``Bucketed`` vs the double-buffered ``Pipelined`` engine, at a
+   large cap (1 bucket — the schedules coincide) and a small cap
+   (12 buckets — the pipeline has stages to overlap).  ``us`` is
+   build+compile+``rounds`` executions per round — compile included, like
+   every other row in this harness, because program size is where the
+   scan-based pipeline wins on CPU: the serial path unrolls one
+   compress/collective chain per bucket (O(n_buckets) HLO, one
+   ``all-reduce`` pair per bucket), the pipeline compiles one scan body
+   (O(1) HLO, collectives hoisted into the loop).  ``collectives`` for
+   these rows is the all-reduce *op count in the program* — the
+   program-size claim, 2 per bucket serial vs O(1) pipelined.  The
+   ``topk:0.05:pipelined`` record carries ``speedup_vs_serial`` — the
+   acceptance bar is >= 1.2x over the serial baseline at the same cap.
 
 ``run(smoke=True)`` (CI) does 2 rounds instead of 12.  Machine-readable
 records for BENCH_reduction.json are left in ``RECORDS``.
@@ -22,7 +33,9 @@ Standalone: PYTHONPATH=src python -m benchmarks.bench_bucketing [--smoke]
 """
 from __future__ import annotations
 
+import json
 import os
+import time
 
 if "jax" not in __import__("sys").modules:   # standalone: force devices
     os.environ["XLA_FLAGS"] = (
@@ -32,6 +45,7 @@ if "jax" not in __import__("sys").modules:   # standalone: force devices
 from typing import Dict, List   # noqa: E402
 
 import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
@@ -47,14 +61,27 @@ from benchmarks.common import Row, cls_setup, timed_run  # noqa: E402
 # deep-ish MLP: 7 layers x (w, b) = 14 leaves, so the per-leaf path pays
 # 14 grouped collectives where the bucketed path pays 1 (one f32 bucket)
 HIDDEN = (48,) * 6
+# (row name, reducer spec, bucket_bytes, overlap) — overlap=False pins the
+# PR 3 serial schedule so the snapshot rows stay comparable across PRs
 VARIANTS = (
-    ("mean", "mean", 0),                 # dense reference (never bucketed)
-    ("topk:0.05:perleaf", "topk:0.05", 0),
-    ("topk:0.05:bucketed", "topk:0.05", 4 << 20),
-    ("qint8:128:perleaf", "qint8:128", 0),
-    ("qint8:128:bucketed", "qint8:128", 4 << 20),
+    ("mean", "mean", 0, False),              # dense reference (never bucketed)
+    ("topk:0.05:perleaf", "topk:0.05", 0, False),
+    ("topk:0.05:bucketed", "topk:0.05", 4 << 20, False),
+    ("qint8:128:perleaf", "qint8:128", 0, False),
+    ("qint8:128:bucketed", "qint8:128", 4 << 20, False),
 )
 ROUNDS = 12
+
+# -- reduction-schedule A/B: shape and builder shared with
+# tests/test_pipeline.py via repro.testing (both must measure the SAME
+# program).  Each variant is measured in a FRESH subprocess so neither
+# engine inherits the other's warm XLA/LLVM state — on a small CPU box
+# the wall-clock of host-device collectives is noisy, and the bucket
+# count is chosen high enough that the structural gap (serial compiles
+# one compress/collective chain per bucket, the pipeline one scan body)
+# dominates that noise.
+from repro.testing import (AB_LARGE_CAP, AB_SMALL_CAP,  # noqa: E402
+                           build_ab_reduction, count_allreduce_ops)
 
 # machine-readable rows for BENCH_reduction.json (benchmarks/run.py)
 RECORDS: List[Dict] = []
@@ -87,15 +114,110 @@ def _hlo_collectives(reducer, init_fn) -> int:
     return summary.get("all-reduce", {}).get("count", 0)
 
 
+def _ab_measure(sched: str, cap: int, rounds: int) -> Dict:
+    """One A/B variant, measured in THIS process (the child side of the
+    subprocess-per-variant harness): build the shared reduction
+    (repro.testing — same program tests/test_pipeline.py verifies),
+    compile, execute ``rounds`` times.  ``us`` is
+    (compile + executions) / rounds — compile included, like every other
+    row in this harness; ``warm_us``/``min_us`` summarize the per-round
+    executions."""
+    import hashlib
+    b = build_ab_reduction(sched, cap)
+    p_sh = jax.device_put(b["params"], b["shardings"][0])
+    s_sh = jax.device_put(b["state"], b["shardings"][1])
+
+    t0 = time.time()
+    # execute through the AOT-compiled executable: calling the jitted fn
+    # would trace+compile a second time (the jit dispatch cache is
+    # separate from the AOT path), double-counting compile in `us`
+    compiled = b["fn"].lower(p_sh, s_sh).compile()
+    compile_s = time.time() - t0
+    per_exec = []
+    for _ in range(rounds):
+        t1 = time.time()
+        out = jax.block_until_ready(compiled(p_sh, s_sh))  # noqa: F841
+        per_exec.append(time.time() - t1)
+    us = (compile_s + sum(per_exec)) / rounds * 1e6
+    txt = compiled.as_text()
+    return {
+        "us": round(us, 1),
+        "payload_B": b["reducer"].payload_bytes(b["tree1"]),
+        "collectives": count_allreduce_ops(txt),
+        "n_buckets": b["n_buckets"],
+        "compile_s": round(compile_s, 2),
+        "warm_us": round(float(np.median(per_exec)) * 1e6, 1),
+        "min_us": round(min(per_exec) * 1e6, 1),
+        "hlo_md5": hashlib.md5(txt.encode()).hexdigest(),
+    }
+
+
+def _reduction_ab(rounds: int) -> List[Row]:
+    """Serial vs pipelined reduction schedule, small vs large buckets,
+    on the 8-host-device mesh — one fresh subprocess per variant so the
+    engines compile and run under identical conditions."""
+    import subprocess
+    import sys
+
+    rows: List[Row] = []
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+
+    serial_rec: Dict[str, Dict] = {}
+    for cap, cap_tag in ((AB_LARGE_CAP, "@1bucket"), (AB_SMALL_CAP, "")):
+        for sched in ("serial", "pipelined"):
+            name = f"topk:0.05:{sched}{cap_tag}"
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_bucketing",
+                 "--ab-variant", sched, "--ab-cap", str(cap),
+                 "--rounds", str(rounds)],
+                env=env, cwd=repo, capture_output=True, text=True,
+                timeout=900)
+            if r.returncode != 0:
+                rows.append((f"bucketing/red8/{name}", 0.0,
+                             "ERROR " + r.stderr.strip()[-200:]))
+                continue
+            rec = json.loads(r.stdout.strip().splitlines()[-1])
+            md5 = rec.pop("hlo_md5")
+            rec["name"] = name
+            if sched == "serial":
+                serial_rec[cap_tag] = {"us": rec["us"], "md5": md5}
+            else:
+                base = serial_rec.get(cap_tag)
+                if base:
+                    rec["speedup_vs_serial"] = round(
+                        base["us"] / rec["us"], 2)
+                    # single-bucket layouts fall back to the serial
+                    # schedule — identical programs; any timing delta in
+                    # that pair is harness noise, and the record says so
+                    rec["same_hlo_as_serial"] = (md5 == base["md5"])
+            RECORDS.append(rec)
+            derived = (f"n_buckets={rec['n_buckets']} "
+                       f"hlo_all_reduces={rec['collectives']} "
+                       f"compile_s={rec['compile_s']:.2f} "
+                       f"warm_us={rec['warm_us']:.0f}"
+                       + (f" speedup_vs_serial="
+                          f"{rec.get('speedup_vs_serial', 0):.2f} "
+                          f"same_hlo={rec.get('same_hlo_as_serial')}"
+                          if sched == "pipelined" else ""))
+            rows.append((f"bucketing/red8/{name}", rec["us"], derived))
+    return rows
+
+
 def run(smoke: bool = False) -> List[Row]:
     RECORDS.clear()
     setup = cls_setup(hidden=HIDDEN)
     rounds = 2 if smoke else ROUNDS
     topo = HierTopology(1, 2, 2)
     rows: List[Row] = []
-    for name, spec, bucket_bytes in VARIANTS:
+    for name, spec, bucket_bytes, overlap in VARIANTS:
         hier = HierAvgParams(k1=2, k2=4, reducer=spec,
-                             bucket_bytes=bucket_bytes)
+                             bucket_bytes=bucket_bytes, overlap=overlap)
         sim = Simulator(setup["loss_fn"], setup["init_fn"], setup["sample"],
                         topo=topo, hier=hier, optimizer=sgd(0.1),
                         per_learner_batch=16,
@@ -109,6 +231,7 @@ def run(smoke: bool = False) -> List[Row]:
         rows.append((f"bucketing/{name}", us, derived))
         RECORDS.append({"name": name, "us": round(us, 1),
                         "payload_B": payload, "collectives": colls})
+    rows.extend(_reduction_ab(rounds))
     return rows
 
 
@@ -117,6 +240,15 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ab-variant", choices=("serial", "pipelined"),
+                    default=None, help="child mode: measure ONE "
+                    "reduction-schedule variant and print a json record")
+    ap.add_argument("--ab-cap", type=int, default=AB_SMALL_CAP)
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
     args = ap.parse_args()
-    for n, us, d in run(smoke=args.smoke):
-        print(f"{n},{us:.0f},{d}")
+    if args.ab_variant:
+        print(json.dumps(_ab_measure(args.ab_variant, args.ab_cap,
+                                     args.rounds)))
+    else:
+        for n, us, d in run(smoke=args.smoke):
+            print(f"{n},{us:.0f},{d}")

@@ -16,8 +16,9 @@ import json
 import os
 from typing import List
 
+from repro.comm import DEFAULT_BUCKET_BYTES
 from repro.configs import ALL_ARCHS, get_config
-from repro.core.plan import ReductionPlan
+from repro.core.plan import ReductionPlan, apply_bucketing
 from repro.core.theory import (CommModel, comm_per_k2_steps, param_template,
                                plan_comm_per_round)
 from repro.core.topology import HierTopology
@@ -31,7 +32,10 @@ PLAN_SPEC = "local@4:cast:bfloat16/pod@8:mean/global@16:topk:0.05"
 
 def run() -> List[Row]:
     cm = CommModel()
-    plan = ReductionPlan.parse(PLAN_SPEC)
+    # resolved like a round builder would: compressed levels bucketed on
+    # the pipelined schedule, so the per-level rows carry the overlap term
+    plan = apply_bucketing(ReductionPlan.parse(PLAN_SPEC),
+                           DEFAULT_BUCKET_BYTES)
     rows: List[Row] = []
     for arch in ALL_ARCHS:
         cfg = get_config(arch)
@@ -60,12 +64,16 @@ def run() -> List[Row]:
         rows.append((f"comm/{arch}", 0.0, derived))
 
         # per-level breakdown of the 3-level plan on the 2-pod topology;
-        # payloads vs the dense fp32 mean (bench_compression's baseline)
+        # payloads vs the dense fp32 mean (bench_compression's baseline).
+        # A realistic leaf structure (~8 matrices per block) lets the
+        # bucketed levels show their message counts and overlap term.
         topo = HierTopology(pods=2, groups=lay.groups, local=lay.local)
-        template = param_template(cfg.param_count(), dtype="float32")
+        template = param_template(cfg.param_count(), dtype="float32",
+                                  n_leaves=max(1, 8 * cfg.n_layers))
         dense = cfg.param_count() * 4
         for lc in plan_comm_per_round(plan, topo, template, cm):
             ms_per_step = lc.seconds_per_round / plan.total_period * 1e3
+            overlap_ms = lc.overlap_s / plan.total_period * 1e3
             tier = "dci" if lc.bandwidth == cm.slow_bw else "ici"
             rows.append((
                 f"comm/{arch}/plan/{lc.name}", 0.0,
@@ -73,5 +81,7 @@ def run() -> List[Row]:
                 f"payload_MB={lc.payload_bytes / 2**20:.1f} "
                 f"compress_x={dense / max(lc.payload_bytes, 1):.1f} "
                 f"count_per_round={lc.count_per_round} tier={tier} "
-                f"ms_per_step={ms_per_step:.3f}"))
+                f"msgs={lc.messages} ms_per_step={ms_per_step:.3f} "
+                f"overlap_ms_per_step={overlap_ms:.3f} "
+                f"overlap_x={lc.overlap_speedup:.2f}"))
     return rows

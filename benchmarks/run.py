@@ -14,8 +14,10 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
 
 ``bench_bucketing`` additionally writes machine-readable
 ``BENCH_reduction.json`` at the repo root (schema per row: name, us,
-payload_B, collectives) so successive PRs can track the reduction-path
-perf trajectory; CI uploads it as an artifact.
+payload_B, collectives; the serial-vs-pipelined A/B rows add n_buckets,
+compile_s, warm_us, min_us, speedup_vs_serial, same_hlo_as_serial) so
+successive PRs can track the reduction-path perf trajectory; CI uploads
+it as an artifact and fails if the A/B rows go missing.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig1] [--smoke]
 """

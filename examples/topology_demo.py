@@ -40,27 +40,37 @@ Hier-AVG pays it once per K2 steps and rides ICI in between — the paper's
 # ------------------------------------------------------------------ #
 
 PLAN = "local@4:cast:bfloat16/pod@8:mean/global@16:topk:0.05"
-plan = ReductionPlan.parse(PLAN)
+from repro.comm import DEFAULT_BUCKET_BYTES
+from repro.core.plan import apply_bucketing
+plan = apply_bucketing(ReductionPlan.parse(PLAN), DEFAULT_BUCKET_BYTES)
 print(f"\n3-level plan {plan.describe()} (2-pod view):\n")
 print(f"{'arch':26s} {'level':7s} {'period':>6s} {'n':>4s} "
       f"{'payload MB':>10s} {'compress':>8s} {'x/round':>7s} "
-      f"{'tier':>4s} {'ms/step':>8s}")
+      f"{'tier':>4s} {'msgs':>5s} {'ms/step':>8s} {'piped':>8s} "
+      f"{'overlap':>7s}")
 for arch in ALL_ARCHS:
     cfg = get_config(arch)
     lay = cfg.layout
     topo = HierTopology(2, lay.groups, lay.local)
     dense = cfg.param_count() * 4          # fp32 mean baseline
-    template = param_template(cfg.param_count(), dtype="float32")
+    template = param_template(cfg.param_count(), dtype="float32",
+                              n_leaves=max(1, 8 * cfg.n_layers))
     for lc in plan_comm_per_round(plan, topo, template, cm):
         tier = "dci" if lc.bandwidth == cm.slow_bw else "ici"
         print(f"{arch:26s} {lc.name:7s} {lc.period:>6d} "
               f"{lc.participants:>4d} {lc.payload_bytes / 2**20:>10.1f} "
               f"{dense / max(lc.payload_bytes, 1):>7.1f}x "
-              f"{lc.count_per_round:>7d} {tier:>4s} "
-              f"{lc.seconds_per_round / plan.total_period * 1e3:>8.3f}")
+              f"{lc.count_per_round:>7d} {tier:>4s} {lc.messages:>5d} "
+              f"{lc.seconds_per_round / plan.total_period * 1e3:>8.3f} "
+              f"{lc.overlap_s / plan.total_period * 1e3:>8.3f} "
+              f"{lc.overlap_speedup:>6.2f}x")
 
 print("""
 Each level is costed over its own link tier (local/pod ride ICI, global
 crosses DCI) and its own compressed payload (cast halves the words, topk
-5% transmits value+index pairs for 5% of coordinates).  No legacy knob can
+5% transmits value+index pairs for 5% of coordinates).  'piped' is the
+wall ms/step of the pipelined bucket schedule (comm/bucket.py Pipelined):
+each bucket's collective overlaps the next bucket's compress, so a level
+pays max(compute, comm) per stage plus the fill/drain ramp instead of the
+sum — 'overlap' is the serial/pipelined wall ratio.  No legacy knob can
 express this schedule — it is a ReductionPlan-only experiment.""")

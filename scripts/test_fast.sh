@@ -16,4 +16,7 @@ echo "== fast tier =="
 python -m pytest -x -q "$@"
 
 echo "== pallas_interpret kernel checks =="
-python -m pytest -x -q -m "" tests/test_kernels.py
+# the >2^24-row compaction test is minutes of interpret-mode compute on
+# CPU — nightly's full suite covers it (pytest -m "")
+python -m pytest -x -q -m "" tests/test_kernels.py \
+    -k "not beyond_2e24"

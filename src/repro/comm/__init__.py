@@ -19,18 +19,25 @@ collective per bucket); ``"topk:0.05:perleaf"`` pins the legacy per-leaf
 pipeline even when the plan's ``bucket_bytes`` knob is on.  Without a
 modifier, plan resolution (core/plan.py) buckets compressed reducers by
 default.
+
+A trailing ``:pipelined`` / ``:serial`` modifier forces the bucket
+*schedule*: ``:pipelined`` runs the double-buffered overlapped engine
+(comm/bucket.py Pipelined) even when ``HierAvgParams.overlap`` is off;
+``:serial`` pins the strictly sequential compress-then-reduce schedule.
+Without a modifier, plan resolution pipelines bucketed reducers whenever
+the plan's ``overlap`` knob (default on) allows.
 """
 from repro.comm.reducer import (CastReducer, MeanReducer,  # noqa: F401
-                                Reducer, reduce_with)
+                                Reducer, reduce_with, serial_reduce)
 from repro.comm.sparse import (EFState, RandKReducer,  # noqa: F401
                                TopKReducer)
 from repro.comm.quant import QInt8Reducer  # noqa: F401
 from repro.comm.lowrank import LowRankState, PowerSGDReducer  # noqa: F401
 from repro.comm.bucket import (DEFAULT_BUCKET_BYTES,  # noqa: F401
-                               Bucketed, BucketLayout)
+                               Bucketed, BucketLayout, Pipelined)
 
 REDUCER_NAMES = ("mean", "cast", "topk", "randk", "qint8", "powersgd")
-_MODIFIERS = ("bucketed", "perleaf")
+_MODIFIERS = ("bucketed", "perleaf", "pipelined", "serial")
 
 
 def get_reducer(spec, **kw) -> Reducer:
@@ -43,10 +50,24 @@ def get_reducer(spec, **kw) -> Reducer:
     if spec is None:
         return MeanReducer()
     spec = str(spec)
-    modifier = None
-    head, _, tail = spec.rpartition(":")
-    if head and tail in _MODIFIERS:
-        spec, modifier = head, tail
+    modifiers = []
+    while True:                     # modifiers may stack (":bucketed:serial")
+        head, _, tail = spec.rpartition(":")
+        if head and tail in _MODIFIERS:
+            spec = head
+            modifiers.append(tail)
+        else:
+            break
+    if "perleaf" in modifiers and ("pipelined" in modifiers
+                                   or "bucketed" in modifiers):
+        raise ValueError(
+            f"contradictory modifiers {modifiers} on reducer spec "
+            f"{spec!r}: ':perleaf' disables the packing ':pipelined'/"
+            f"':bucketed' require")
+    if "pipelined" in modifiers and "serial" in modifiers:
+        raise ValueError(
+            f"contradictory modifiers {modifiers} on reducer spec "
+            f"{spec!r}: pick one of ':pipelined' / ':serial'")
     name, _, arg = spec.partition(":")
     if name == "mean":
         red = MeanReducer()
@@ -63,10 +84,26 @@ def get_reducer(spec, **kw) -> Reducer:
     else:
         raise ValueError(
             f"unknown reducer spec {spec!r}; known: {REDUCER_NAMES} "
-            f"(+ optional ':bucketed' / ':perleaf' modifier)")
-    if modifier == "bucketed":
-        return Bucketed(red)
-    if modifier == "perleaf":
+            f"(+ optional ':bucketed'/':perleaf' and "
+            f"':pipelined'/':serial' modifiers)")
+    if "perleaf" in modifiers:
         red.bucket_opt_out = True   # declared on Reducer; describe()
         # appends ":perleaf" from it, so the spec round-trips
+        if "serial" in modifiers:
+            red.overlap_opt_out = True
+        return red
+    if "pipelined" in modifiers:
+        wrapped = Pipelined(red)
+        wrapped.pipeline_pin = True   # explicit pin: plan resolution
+        # keeps the pipelined engine even when overlap is off
+        return wrapped
+    if "bucketed" in modifiers:
+        wrapped = Bucketed(red)
+        if "serial" in modifiers:
+            wrapped.overlap_opt_out = True
+        return wrapped
+    if "serial" in modifiers:
+        # schedule pin on the raw reducer: plan resolution may still
+        # auto-bucket it, but will keep the serial (non-pipelined) engine
+        red.overlap_opt_out = True
     return red

@@ -30,6 +30,12 @@ Error-feedback state lives in bucket space: ``Bucketed.init_state`` packs
 the params first, and every compress re-derives the layout and checks the
 carried state against it, so a layout/state mismatch fails loudly instead
 of silently misaligning residuals.
+
+:class:`Pipelined` (the default engine when ``HierAvgParams.overlap`` is
+on) runs the same bucket codec on a double-buffered schedule — a
+``lax.scan`` over uniform buckets that issues stage *i*'s grouped
+collective before stage *i+1*'s compress, so async-collective backends
+overlap the two and the program stays O(1) in bucket count.
 """
 from __future__ import annotations
 
@@ -40,7 +46,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.comm.reducer import N_LEARNER_AXES, Reducer
+from repro.comm.reducer import N_LEARNER_AXES, Reducer, serial_reduce
 
 # Default per-bucket cap (bytes of one learner's slice).  4 MiB keeps a
 # whole fp32 bucket row (~1M elements) inside a TPU core's VMEM budget for
@@ -103,13 +109,44 @@ class BucketLayout:
     @classmethod
     def build(cls, tree, *, bucket_bytes: int = DEFAULT_BUCKET_BYTES,
               lead_axes: int = N_LEARNER_AXES,
-              matrix: bool = False) -> "BucketLayout":
+              matrix: bool = False, uniform: bool = False,
+              shard_axes: Optional[Tuple[str, ...]] = None
+              ) -> "BucketLayout":
         """Dtype-grouped, size-capped buckets in leaf order.
 
         A leaf larger than ``bucket_bytes`` gets a bucket of its own
         (leaves are never split across buckets); ``bucket_bytes <= 0``
         means one bucket per dtype.
+
+        ``uniform=True`` zero-pads every bucket of a dtype group to the
+        group's largest bucket, so the buckets form a rectangular
+        schedule a ``lax.scan`` can iterate (the pipelined engine's
+        requirement); single-bucket groups keep their exact size, so
+        uniform and ragged layouts agree whenever there is nothing to
+        scan over.
+
+        ``shard_axes`` names mesh axes that shard the leaves' *trailing*
+        (per-learner) dims — e.g. ``("fsdp",)`` under a
+        ``ParallelLayout(fsdp>1)``.  Packing such leaves into one flat
+        bucket would concatenate coordinates owned by different shards
+        and turn the per-bucket grouped collective into a cross-shard
+        gather; shard-aware bucketing (one bucket run per shard) is not
+        implemented yet, so this refuses loudly instead of silently
+        building a layout whose collectives re-materialize every shard.
         """
+        if shard_axes:
+            raise NotImplementedError(
+                f"shard-aware bucketing is not implemented: leaves are "
+                f"sharded over mesh axes {tuple(shard_axes)} (an fsdp>1 "
+                f"ParallelLayout), and packing cross-shard leaves into "
+                f"one flat bucket would make each bucket collective "
+                f"re-materialize all shards; run with fsdp=1 or "
+                f"bucket_bytes=0 (per-leaf reductions) until per-shard "
+                f"bucket runs land")
+        if matrix and uniform:
+            raise ValueError(
+                "uniform (pipelined) layouts are flat-only; matrix-mode "
+                "reducers (PowerSGD) run the serial bucket schedule")
         leaves, treedef = jax.tree.flatten(tree)
         per_dtype: Dict[str, List[Tuple[int, Tuple[int, ...], int]]] = {}
         for i, leaf in enumerate(leaves):
@@ -138,12 +175,19 @@ class BucketLayout:
                                           tuple(slots)))
                 slots, filled = [], 0
 
+            group_start = len(buckets)
             for i, shape, size in entries:
                 if cap and slots and filled + size > cap:
                     flush()
                 slots.append(BucketSlot(i, filled, size, shape))
                 filled += size
             flush()
+            if uniform and len(buckets) - group_start > 1:
+                group = buckets[group_start:]
+                pad_n = max(b.size for b in group)
+                buckets[group_start:] = [
+                    BucketSpec(b.dtype, b.size, (pad_n,), b.slots)
+                    for b in group]
         return cls(treedef, lead_axes, tuple(buckets))
 
     # ------------------------------------------------------------------ #
@@ -231,6 +275,15 @@ class Bucketed(Reducer):
     """
 
     name = "bucketed"
+    # Pipelined overrides: uniform (scan-able) bucket shapes + the
+    # interleaved schedule
+    uniform_layout = False
+    # set by the explicit ":pipelined" spec modifier (comm/__init__.py):
+    # plan resolution must NOT demote this wrapper to the serial engine
+    # when the plan's overlap knob is off.  Auto-pipelined wrappers
+    # (created by apply_bucketing from overlap=True) leave it False so a
+    # later resolution with overlap=False can rebuild them serial.
+    pipeline_pin = False
 
     def __init__(self, inner: Reducer, bucket_bytes: Optional[int] = None):
         """``bucket_bytes=None`` means "inherit": the layout uses
@@ -254,6 +307,10 @@ class Bucketed(Reducer):
         return DEFAULT_BUCKET_BYTES if self.bucket_bytes is None \
             else self.bucket_bytes
 
+    @property
+    def has_codec(self) -> bool:
+        return self.inner.has_codec
+
     # -- layout ---------------------------------------------------------- #
 
     def layout_for(self, tree, lead_axes: int = N_LEARNER_AXES
@@ -266,7 +323,8 @@ class Bucketed(Reducer):
             lay = BucketLayout.build(
                 tree, bucket_bytes=self.effective_bucket_bytes,
                 lead_axes=lead_axes,
-                matrix=getattr(self.inner, "wants_matrix", False))
+                matrix=getattr(self.inner, "wants_matrix", False),
+                uniform=self.uniform_layout)
             self._layouts[key] = lay
         return lay
 
@@ -325,3 +383,138 @@ class Bucketed(Reducer):
 
     def _describe(self) -> str:
         return f"{self.inner.describe()}:bucketed"
+
+
+# --------------------------------------------------------------------- #
+# the pipelined (overlapped) bucket schedule
+# --------------------------------------------------------------------- #
+
+class Pipelined(Bucketed):
+    """Bucketed reductions on a software-pipelined, double-buffered
+    schedule: while bucket *i*'s reconstruction is in its grouped
+    collective, bucket *i+1* is already compressing.
+
+    The per-bucket stages are expressed as one ``lax.scan`` over the
+    bucket schedule (uniform, zero-padded buckets — see
+    ``BucketLayout.build(uniform=True)``), with the collective for stage
+    *i* issued at the top of iteration *i+1*, before that iteration's
+    compress.  The two are data-independent — the collective consumes
+    only the loop carry — so a backend with async collectives
+    (``all-reduce-start``/``-done``) can run stage *i+1*'s compress
+    inside stage *i*'s collective window; tests/test_pipeline.py asserts
+    this structure on the compiled HLO.  The scan also keeps the program
+    size O(1) in the bucket count (the serial path unrolls one
+    compress/collective/decompress chain per bucket), which is what
+    keeps compile time flat when a multi-GB model packs into hundreds of
+    buckets.
+
+    Semantics: pipelining is a schedule change only.  ``mean``/``cast``
+    are bit-identical to the serial Bucketed path (test-enforced);
+    ``topk`` selects k over the zero-padded uniform bucket (padding is
+    never selected, but k = ratio * padded size, so k can differ by a
+    few coordinates from the ragged serial layout); ``randk`` draws its
+    per-bucket support from a per-stage folded key (a different — equally
+    fresh — stream than the serial path).  Reducers whose carried state
+    cannot be split per bucket (``split_bucket_states`` -> None, e.g.
+    PowerSGD's warm-started Q) and single-bucket layouts fall back to the
+    serial schedule inside ``reduce`` — same math, nothing to overlap.
+    """
+
+    name = "pipelined"
+    overlaps = True            # theory.plan_comm_per_round costing hint
+
+    @property
+    def uniform_layout(self) -> bool:
+        # matrix-mode (PowerSGD) buckets stay ragged: they cannot scan
+        # (and fall back to the serial schedule below anyway)
+        return not getattr(self.inner, "wants_matrix", False)
+
+    # -- per-bucket stage ------------------------------------------------ #
+
+    def _stage(self, bucket, st):
+        """compress+reconstruct one bucket: the compute half of a
+        pipeline stage (the collective half is the avg_fn call)."""
+        payload, st2 = self.inner.compress([bucket], st)
+        xhat = self.inner.decompress(payload, [bucket], st2)
+        return xhat[0], st2
+
+    # -- the schedule ---------------------------------------------------- #
+
+    def reduce(self, avg_fn, tree, state, constraint_fn=None):
+        """The whole reduction, pipelined per bucket (called by
+        ``reduce_with`` instead of the serial composition)."""
+        lay = self.layout_for(tree)
+        n = lay.n_buckets
+        sts = (self.inner.split_bucket_states(state, n) if self.stateful
+               else [() for _ in range(n)])
+        if n < 2 or sts is None:
+            # nothing to overlap / unsplittable state: serial schedule
+            return serial_reduce(self, avg_fn, tree, state, constraint_fn)
+        if self.stateful:
+            lead = tuple(jax.tree.leaves(tree)[0].shape[:lay.lead_axes])
+            self._check_state(lay, state, lead)
+        buckets = lay.pack(tree)
+
+        outs: List[Any] = [None] * n
+        new_sts: List[Any] = list(sts)
+        # scan needs rectangular xs: pipeline each (dtype, shape) run of
+        # the uniform layout; a run of one has no neighbor to overlap
+        groups: Dict[Tuple[str, Tuple[int, ...]], List[int]] = {}
+        for i, b in enumerate(lay.buckets):
+            groups.setdefault((b.dtype, b.shape), []).append(i)
+        for idxs in groups.values():
+            if len(idxs) == 1:
+                i = idxs[0]
+                xhat, st2 = self._stage(buckets[i], sts[i])
+                outs[i] = avg_fn(xhat, constraint_fn)
+                new_sts[i] = st2
+            else:
+                self._pipeline(idxs, buckets, sts, outs, new_sts,
+                               avg_fn, constraint_fn)
+
+        new_state = (self.inner.join_bucket_states(state, new_sts)
+                     if self.stateful else state)
+        out_buckets, new_state = self.inner.finalize(outs, buckets,
+                                                     new_state)
+        return lay.unpack(out_buckets), new_state
+
+    def _pipeline(self, idxs, buckets, sts, outs, new_sts, avg_fn,
+                  constraint_fn):
+        """Double-buffered scan over one uniform bucket run: iteration
+        *j* issues the collective for stage *j-1*'s reconstruction (the
+        carry) and then compresses bucket *j* — so the collective never
+        waits on this iteration's compute, and vice versa."""
+        stateful = self.stateful
+        # prologue: fill the pipeline with stage 0's compress
+        xhat0, st0 = self._stage(buckets[idxs[0]], sts[idxs[0]])
+        new_sts[idxs[0]] = st0
+        xs = jnp.stack([buckets[i] for i in idxs[1:]])
+        if stateful:
+            st_xs = jax.tree.map(lambda *ls: jnp.stack(ls),
+                                 *[sts[i] for i in idxs[1:]])
+
+        def body(carry, x):
+            # collective for the carried stage FIRST — it depends only on
+            # the carry, so stage j's compress below is free to overlap it
+            out_prev = avg_fn(carry, constraint_fn)
+            b, st = x if stateful else (x, ())
+            xhat, st2 = self._stage(b, st)
+            return xhat, (out_prev, st2)
+
+        xs_all = (xs, st_xs) if stateful else xs
+        last, (outs_rest, st_rest) = jax.lax.scan(body, xhat0, xs_all)
+        # epilogue: drain the pipeline — the final stage's collective
+        outs[idxs[-1]] = avg_fn(last, constraint_fn)
+        for j, i in enumerate(idxs[:-1]):
+            outs[i] = jax.tree.map(lambda l, j=j: l[j], outs_rest)
+        if stateful:
+            for j, i in enumerate(idxs[1:]):
+                new_sts[i] = jax.tree.map(lambda l, j=j: l[j], st_rest)
+
+    def _describe(self) -> str:
+        # only an explicit ':pipelined' pin round-trips as one: auto
+        # wrappers (engine chosen by the plan's overlap knob) describe as
+        # ':bucketed', so re-parsing the spec under a different overlap
+        # setting re-chooses the engine instead of silently pinning it
+        suffix = ":pipelined" if self.pipeline_pin else ":bucketed"
+        return f"{self.inner.describe()}{suffix}"

@@ -67,6 +67,7 @@ class PowerSGDReducer(Reducer):
 
     name = "powersgd"
     stateful = True
+    has_codec = True
     # NOT bucketed by default: the low-rank codec exploits each weight
     # matrix's own row/column structure, which flat packing destroys.
     # Explicit "powersgd:<r>:bucketed" still works — wants_matrix makes

@@ -45,6 +45,7 @@ class QInt8Reducer(Reducer):
 
     name = "qint8"
     bucket_by_default = True
+    has_codec = True
 
     def __init__(self, block: int = 256):
         if block < 1:

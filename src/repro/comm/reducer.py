@@ -72,6 +72,15 @@ class Reducer:
     # instance-level opt-out set by the ":perleaf" spec modifier
     # (comm/__init__.py get_reducer); plan resolution respects it
     bucket_opt_out = False
+    # instance-level opt-out set by the ":serial" spec modifier: bucketed
+    # reductions for this reducer stay on the serial (non-pipelined)
+    # schedule even when the plan's overlap knob is on
+    overlap_opt_out = False
+    # does compress/decompress do real per-element work?  False for the
+    # identity mean; the comm cost model (core/theory.py) bills codec
+    # compute — the overlappable half of a pipeline stage — only when
+    # True.  Subclasses with a codec set it.
+    has_codec = False
     # pack buckets as near-square matrices instead of flat vectors (what a
     # low-rank codec needs to act on a bucket at all)
     wants_matrix = False
@@ -79,6 +88,26 @@ class Reducer:
     # -- carried state -------------------------------------------------- #
     def init_state(self, params) -> Any:
         return ()
+
+    def split_bucket_states(self, state, n: int):
+        """Per-bucket views of the carried state, for the pipelined
+        bucket schedule (comm/bucket.py Pipelined): entry ``i`` is the
+        state ``compress``/``decompress`` need when handed bucket ``i``
+        alone.  Stateless reducers split trivially; stateful reducers
+        whose state is per-bucket (the sparse EF pair) override this
+        together with :meth:`join_bucket_states`.  Returning ``None``
+        means the state cannot be split — the pipelined engine falls
+        back to the serial schedule (e.g. PowerSGD's warm-started Q).
+        """
+        if self.stateful:
+            return None
+        return [() for _ in range(n)]
+
+    def join_bucket_states(self, state, per_bucket):
+        """Inverse of :meth:`split_bucket_states`: recombine the
+        per-bucket states threaded through the pipeline into the carried
+        state structure ``init_state`` produced."""
+        return state
 
     # -- codec ---------------------------------------------------------- #
     def compress(self, tree, state) -> Tuple[Any, Any]:
@@ -108,10 +137,14 @@ class Reducer:
 
     def describe(self) -> str:
         """Spec string this reducer round-trips through ``get_reducer``;
-        subclasses override :meth:`_describe`, the ":perleaf" suffix is
-        appended here."""
-        return self._describe() + (":perleaf" if self.bucket_opt_out
-                                   else "")
+        subclasses override :meth:`_describe`, the ":perleaf" / ":serial"
+        opt-out suffixes are appended here."""
+        out = self._describe()
+        if self.bucket_opt_out:
+            out += ":perleaf"
+        if self.overlap_opt_out:
+            out += ":serial"
+        return out
 
     def _describe(self) -> str:
         return self.name
@@ -135,6 +168,7 @@ class CastReducer(Reducer):
 
     name = "cast"
     bucket_by_default = True
+    has_codec = True
 
     def __init__(self, dtype=jnp.bfloat16):
         self.payload_dtype = jnp.dtype(dtype)
@@ -164,15 +198,31 @@ class CastReducer(Reducer):
         return f"cast:{self.payload_dtype.name}"
 
 
+def serial_reduce(reducer: Reducer, avg_fn: Callable, tree, state,
+                  constraint_fn: Optional[Callable] = None):
+    """The serial composition: compress the whole tree, reconstruct,
+    average, finalize — every stage completes before the next starts."""
+    payload, state = reducer.compress(tree, state)
+    xhat = reducer.decompress(payload, tree, state)
+    out = avg_fn(xhat, constraint_fn)
+    return reducer.finalize(out, tree, state)
+
+
 def reduce_with(reducer: Reducer, avg_fn: Callable, tree, state,
                 constraint_fn: Optional[Callable] = None):
     """Run one compressed reduction: compress -> decompress -> average ->
     finalize.  ``avg_fn(tree, constraint_fn)`` is one of the grouped means
     from core/topology.py (local_average / global_average / pod_average).
 
+    A reducer may own the whole reduction schedule by defining
+    ``reduce(avg_fn, tree, state, constraint_fn)`` — the pipelined bucket
+    engine (comm/bucket.py Pipelined) uses this to interleave per-bucket
+    compress stages with the grouped collectives instead of running the
+    serial composition above.
+
     Returns ``(averaged_tree, new_reducer_state)``.
     """
-    payload, state = reducer.compress(tree, state)
-    xhat = reducer.decompress(payload, tree, state)
-    out = avg_fn(xhat, constraint_fn)
-    return reducer.finalize(out, tree, state)
+    own = getattr(reducer, "reduce", None)
+    if own is not None:
+        return own(avg_fn, tree, state, constraint_fn)
+    return serial_reduce(reducer, avg_fn, tree, state, constraint_fn)

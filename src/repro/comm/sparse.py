@@ -54,6 +54,7 @@ class _SparseEFReducer(Reducer):
     """Shared machinery for top-k / random-k; subclasses pick the support."""
 
     stateful = True
+    has_codec = True
     # bucketed by default: k-of-the-bucket approximates the global
     # k-of-the-model selection the EF analyses assume (comm/bucket.py)
     bucket_by_default = True
@@ -75,6 +76,30 @@ class _SparseEFReducer(Reducer):
         # donated TrainState donate the same buffer twice
         ref = jax.tree.map(jnp.copy, params)
         return EFState(ref=ref, err=err, key=jax.random.PRNGKey(0))
+
+    # -- pipelined bucket schedule (comm/bucket.py Pipelined) ------------ #
+    # The EF pair is naturally per-bucket once bucketed (ref/err are lists
+    # of bucket arrays), so the pipeline can thread one (ref, err) pair
+    # per stage.  The key stream follows the serial convention (one split
+    # per reduction, fold_in per bucket): top-k selection is
+    # key-independent, so pipelined == serial bit-for-bit; random-k draws
+    # its per-bucket support from the folded key, a different (equally
+    # fresh) stream than the serial path's.
+
+    def split_bucket_states(self, state: EFState, n: int):
+        refs = jax.tree.leaves(state.ref)
+        errs = jax.tree.leaves(state.err)
+        if len(refs) != n or len(errs) != n:
+            return None                      # not bucket-aligned state
+        _, sub = jax.random.split(state.key)
+        return [EFState(ref=[refs[i]], err=[errs[i]],
+                        key=jax.random.fold_in(sub, i))
+                for i in range(n)]
+
+    def join_bucket_states(self, state: EFState, per_bucket):
+        key, _ = jax.random.split(state.key)   # same advance as compress
+        return EFState(ref=[s.ref[0] for s in per_bucket],
+                       err=[s.err[0] for s in per_bucket], key=key)
 
     def _select(self, delta2d, k: int, key):  # -> (vals, idx) per row
         raise NotImplementedError

@@ -73,6 +73,15 @@ class HierAvgParams:
     reducers pick k globally per bucket.  ``0`` disables auto-bucketing
     (reducers marked ``:bucketed`` in the spec still pack); the dense
     ``mean`` is never auto-bucketed, so the default path is unchanged.
+
+    ``overlap`` picks the bucket *schedule*: on (default), bucketed
+    levels run the pipelined engine (comm/bucket.py Pipelined) — a
+    double-buffered ``lax.scan`` that issues bucket *i*'s grouped
+    collective before bucket *i+1*'s compress so async-collective
+    backends overlap the two; off (``--no-overlap``) pins the strictly
+    serial compress-then-reduce schedule.  Per-level ``:pipelined`` /
+    ``:serial`` spec modifiers override the knob.  Single-bucket layouts
+    are identical either way.
     """
 
     k1: int = 4          # innermost (local) averaging interval (SGD steps)
@@ -82,6 +91,7 @@ class HierAvgParams:
     reducer: str = "mean"  # reduction payload spec, e.g. "topk:0.1" (comm/)
     plan: Optional[str] = None  # N-level plan spec; wins over k1/k2/reducer
     bucket_bytes: int = DEFAULT_BUCKET_BYTES
+    overlap: bool = True  # pipelined (overlapped) bucket schedule
 
     def __post_init__(self):
         if self.bucket_bytes < 0:
@@ -121,7 +131,7 @@ class HierAvgParams:
             p = ReductionPlan.parse(self.plan)
         else:
             p = ReductionPlan.from_k1_k2(self.k1, self.k2, self.reducer)
-        return apply_bucketing(p, self.bucket_bytes)
+        return apply_bucketing(p, self.bucket_bytes, self.overlap)
 
     @property
     def batch_dims(self) -> Tuple[int, ...]:

@@ -48,7 +48,8 @@ class TrainState(NamedTuple):
 def init_state(topo: HierTopology, init_fn, optimizer: Optimizer, key,
                reducer: Optional[Reducer] = None,
                plan: PlanLike = None,
-               bucket_bytes: Optional[int] = None) -> TrainState:
+               bucket_bytes: Optional[int] = None,
+               overlap: Optional[bool] = None) -> TrainState:
     """All learners start from the same w_1 (paper's initialization).
 
     ``plan`` (or legacy ``reducer``) must match what the round/step
@@ -60,29 +61,37 @@ def init_state(topo: HierTopology, init_fn, optimizer: Optimizer, key,
     (comm/bucket.py): a ``plan`` given as a spec string, or a bare
     ``reducer``, gets the same default bucketing a default
     ``HierAvgParams`` resolves to; pass ``bucket_bytes`` (0 = per-leaf)
-    when the round uses a non-default ``HierAvgParams.bucket_bytes``.  A
-    ``ReductionPlan`` *instance* is taken as already resolved (e.g.
-    ``hier.resolved_plan``) unless ``bucket_bytes`` is given explicitly.
+    and/or ``overlap=False`` when the round uses non-default
+    ``HierAvgParams.bucket_bytes`` / ``HierAvgParams.overlap`` (the
+    pipelined engine pads multi-bucket layouts uniform, so its EF state
+    shapes differ from the serial schedule's).  A ``ReductionPlan``
+    *instance* is taken as already resolved (e.g. ``hier.resolved_plan``)
+    unless ``bucket_bytes`` or ``overlap`` is given explicitly — an
+    explicit ``overlap`` re-chooses the bucket engine (demoting
+    auto-pipelined wrappers to the serial schedule and vice versa; each
+    wrapper keeps its own cap when ``bucket_bytes`` stays None).
     """
     from repro.comm import DEFAULT_BUCKET_BYTES
     params1 = init_fn(key)
     params = stack_like(topo, params1)
     opt_state = optimizer.init(params)
+    ov = True if overlap is None else overlap
     if plan is not None:
         if isinstance(plan, ReductionPlan):
-            p = plan if bucket_bytes is None \
-                else apply_bucketing(plan, bucket_bytes)
+            p = plan if (bucket_bytes is None and overlap is None) \
+                else apply_bucketing(
+                    plan, 0 if bucket_bytes is None else bucket_bytes, ov)
         else:
             p = apply_bucketing(
                 ReductionPlan.parse(plan),
                 DEFAULT_BUCKET_BYTES if bucket_bytes is None
-                else bucket_bytes)
+                else bucket_bytes, ov)
         comm_state = init_comm_state(p, params)
     elif reducer is not None:
         comm_state = init_comm_state(
             apply_bucketing(ReductionPlan.from_k1_k2(1, 1, reducer),
                             DEFAULT_BUCKET_BYTES if bucket_bytes is None
-                            else bucket_bytes), params)
+                            else bucket_bytes, ov), params)
     else:
         comm_state = ()
     return TrainState(params, opt_state, jnp.zeros((), jnp.int32),

@@ -23,7 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Tuple, Union
 
-from repro.comm import (DEFAULT_BUCKET_BYTES, Bucketed, Reducer,
+from repro.comm import (DEFAULT_BUCKET_BYTES, Bucketed, Pipelined, Reducer,
                         get_reducer)
 from repro.core.topology import (GLOBAL_ARRAY_AXES, LOCAL_ARRAY_AXES,
                                  POD_ARRAY_AXES)
@@ -202,11 +202,13 @@ class ReductionPlan:
         return f"ReductionPlan({self.describe()})"
 
 
-def apply_bucketing(plan: ReductionPlan, bucket_bytes: int
-                    ) -> ReductionPlan:
-    """Wrap each level's reducer in :class:`~repro.comm.Bucketed`
-    (comm/bucket.py) so it compresses and all-reduces size-capped flat
-    buckets instead of raw leaves.
+def apply_bucketing(plan: ReductionPlan, bucket_bytes: int,
+                    overlap: bool = True) -> ReductionPlan:
+    """Wrap each level's reducer in a bucket engine (comm/bucket.py) so
+    it compresses and all-reduces size-capped flat buckets instead of
+    raw leaves — :class:`~repro.comm.Pipelined` (the double-buffered
+    overlapped schedule) when ``overlap`` is on, plain
+    :class:`~repro.comm.Bucketed` (strictly serial) otherwise.
 
     Applied per level: reducers opted out (``:perleaf``) stay per-leaf,
     ``bucket_by_default`` codecs (cast / topk / randk / qint8) are
@@ -217,19 +219,45 @@ def apply_bucketing(plan: ReductionPlan, bucket_bytes: int
     PowerSGD keep per-leaf semantics unless explicitly marked.
     ``bucket_bytes <= 0`` disables auto-wrapping (explicit ``:bucketed``
     markers still apply, at their own/default cap).
+
+    Schedule selection honors the spec modifiers over the knob: an
+    explicit ``:pipelined`` reducer stays pipelined even with
+    ``overlap=False``, and a ``:serial`` pin stays serial even with
+    ``overlap=True``.  (Pipelined layouts with a single bucket fall back
+    to the serial schedule at trace time — same math, nothing to
+    overlap — so the default path is unchanged for small models.)
     """
     levels, changed = [], False
     for lvl in plan.levels:
         r = lvl.reducer
-        if (isinstance(r, Bucketed) and r.bucket_bytes is None
-                and bucket_bytes and bucket_bytes > 0
-                and bucket_bytes != r.effective_bucket_bytes):
-            lvl = replace(lvl, reducer=Bucketed(r.inner, bucket_bytes))
-            changed = True
+        new = r
+        if isinstance(r, Bucketed):
+            if isinstance(r, Pipelined) and r.pipeline_pin:
+                engine = Pipelined           # explicit :pipelined wins
+            elif r.overlap_opt_out or r.inner.overlap_opt_out:
+                engine = Bucketed            # explicit :serial pin
+            else:
+                # auto-chosen wrappers (including Pipelined ones a
+                # previous resolution created) follow the current knob —
+                # so re-resolving a default plan with overlap=False
+                # really demotes it to the serial engine
+                engine = Pipelined if overlap else Bucketed
+            cap = r.bucket_bytes
+            if (cap is None and bucket_bytes and bucket_bytes > 0
+                    and bucket_bytes != r.effective_bucket_bytes):
+                cap = bucket_bytes
+            if type(r) is not engine or cap != r.bucket_bytes:
+                new = engine(r.inner, cap)
+                new.overlap_opt_out = r.overlap_opt_out
+                new.pipeline_pin = getattr(r, "pipeline_pin", False)
         elif (bucket_bytes and bucket_bytes > 0
-                and not isinstance(r, Bucketed) and r.bucket_by_default
-                and not r.bucket_opt_out):
-            lvl = replace(lvl, reducer=Bucketed(r, bucket_bytes))
+                and r.bucket_by_default and not r.bucket_opt_out):
+            engine = Pipelined if (overlap and not r.overlap_opt_out) \
+                else Bucketed
+            new = engine(r, bucket_bytes)   # a ':serial' pin stays
+            # visible via new.inner.overlap_opt_out (describe round-trip)
+        if new is not r:
+            lvl = replace(lvl, reducer=new)
             changed = True
         levels.append(lvl)
     return ReductionPlan(tuple(levels)) if changed else plan
@@ -243,8 +271,9 @@ def resolve_plan(hier, reducer=None, plan: PlanLike = None) -> ReductionPlan:
     An explicit ``reducer`` (spec or instance) overrides the reducer of
     EVERY level — the legacy single-reducer behavior.  Finally
     ``hier.bucket_bytes`` buckets compressed levels (:func:`apply_bucketing`)
-    so round builders, state init, and payload accounting all agree on the
-    packed layout.
+    — on the pipelined schedule unless ``hier.overlap`` is off — so round
+    builders, state init, and payload accounting all agree on the packed
+    layout.
     """
     if plan is None:
         plan = getattr(hier, "plan", None)
@@ -258,7 +287,8 @@ def resolve_plan(hier, reducer=None, plan: PlanLike = None) -> ReductionPlan:
     if reducer is not None:
         p = p.with_reducer(reducer)
     return apply_bucketing(
-        p, getattr(hier, "bucket_bytes", DEFAULT_BUCKET_BYTES))
+        p, getattr(hier, "bucket_bytes", DEFAULT_BUCKET_BYTES),
+        getattr(hier, "overlap", True))
 
 
 def init_comm_state(plan: ReductionPlan, params):

@@ -134,11 +134,18 @@ class CommModel:
     fabric of bandwidth bw costs 2V(n-1)/(n*bw) seconds (+ latency per
     step).  Reductions confined to one pod (local / pod plan levels) ride
     the fast fabric (intra-pod ICI); levels whose scope crosses pods
-    (global) pay the slow one (inter-pod DCI / the paper's InfiniBand)."""
+    (global) pay the slow one (inter-pod DCI / the paper's InfiniBand).
+
+    ``compress_bw`` models one learner's compress+reconstruct compute as
+    an effective bytes/s over the *uncompressed* bucket (the codec is a
+    few HBM-bound VPU passes: delta + select + scatter ≈ 5 passes of the
+    819 GB/s v5e HBM, rounded down) — what the pipelined schedule
+    overlaps against the wire time (see :func:`plan_comm_per_round`)."""
 
     fast_bw: float = 50.0e9          # intra-pod per-link (ICI)
     slow_bw: float = 2.5e9           # cross-pod effective per-chip (DCI)
     latency: float = 5.0e-6
+    compress_bw: float = 150.0e9     # codec compute, bytes/s uncompressed
 
     def allreduce_time(self, bytes_: float, n: int, bw: float) -> float:
         if n <= 1:
@@ -179,6 +186,36 @@ class LevelCost:
     seconds_per_round: float
     messages: int = 1        # grouped collectives dispatched per reduction
                              # (per-leaf: n_leaves; bucketed: n_buckets)
+    compute_s: float = 0.0   # codec compute per round (compress+rebuild)
+    overlap_s: float = 0.0   # wall seconds per round incl compute on the
+                             # level's actual schedule: pipelined levels
+                             # pay max(compute, comm) per bucket stage plus
+                             # the fill/drain ramp; serial levels pay the
+                             # sum.  Compare against seconds_per_round +
+                             # compute_s (the serial wall) for the win.
+
+    @property
+    def overlap_speedup(self) -> float:
+        """Serial wall / scheduled wall — 1.0 when nothing overlaps."""
+        serial = self.seconds_per_round + self.compute_s
+        return serial / self.overlap_s if self.overlap_s > 0 else 1.0
+
+
+def scheduled_wall(stage_compute: float, stage_comm: float, messages: int,
+                   overlaps: bool) -> float:
+    """Wall seconds of one reduction's bucket schedule.
+
+    Serial: every stage pays compute then comm — the sum.  Pipelined
+    (``overlaps`` and more than one stage): stage *i*'s collective runs
+    concurrently with stage *i+1*'s compute, so the steady state costs
+    ``max(compute, comm)`` per stage and the pipeline fill/drain ramp
+    adds one stage of each.  The single formula both
+    :func:`plan_comm_per_round` and ``launch/analytic.py`` bill from.
+    """
+    if overlaps and messages > 1:
+        return (stage_compute + stage_comm
+                + (messages - 1) * max(stage_compute, stage_comm))
+    return messages * (stage_compute + stage_comm)
 
 
 def param_template(n_params: int, dtype="bfloat16", n_leaves: int = 1):
@@ -221,9 +258,23 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
     trees, or ``param_template(..., n_leaves=...)``); the default
     single-leaf template dispatches one message either way, since buckets
     never split a leaf.
+
+    Each level also carries its codec compute (``compute_s``, the
+    uncompressed bytes through ``cm.compress_bw``) and its *scheduled*
+    wall time ``overlap_s``: pipelined levels (comm/bucket.py Pipelined,
+    detected via ``reducer.overlaps``) run bucket stages double-buffered,
+    so per reduction they pay one stage of compute (fill), one stage of
+    comm (drain), and ``max(compute, comm)`` for every stage in between —
+    instead of the serial ``sum`` for every stage.  With one message
+    there is nothing to overlap and both forms coincide.
     """
+    import jax
+    import jax.numpy as jnp
     cm = cm or CommModel()
     counts = dict(plan.counts_per_round())
+    dense_bytes = int(sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(template)))
     out = []
     for lvl in plan.levels:
         n = 1
@@ -237,8 +288,19 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
         per_reduction = cm.allreduce_time(payload, n, bw) \
             + (messages - 1) * 2 * (n - 1) * cm.latency
         secs = count * per_reduction
+        # per-stage split: comm and compute per bucket/message.  The
+        # identity mean has no codec, so its stages carry no
+        # overlappable compute
+        stage_comm = per_reduction / messages
+        stage_compute = (dense_bytes / messages / cm.compress_bw
+                         if getattr(lvl.reducer, "has_codec", True)
+                         else 0.0)
+        compute_s = count * messages * stage_compute
+        overlap_s = count * scheduled_wall(
+            stage_compute, stage_comm, messages,
+            getattr(lvl.reducer, "overlaps", False))
         out.append(LevelCost(lvl.name, n, lvl.period, payload, count, bw,
-                             secs, messages))
+                             secs, messages, compute_s, overlap_s))
     return tuple(out)
 
 

@@ -33,28 +33,38 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
               interpret=(impl == "pallas_interpret"))
 
 
-def topk_compress(x, k: int, *, impl: str = "xla",
-                  block_n: int = 1024) -> Tuple[jax.Array, jax.Array]:
+def topk_compress(x, k: int, *, impl: str = "xla", block_n: int = 1024,
+                  compaction: str = "auto") -> Tuple[jax.Array, jax.Array]:
     """Dispatchable magnitude top-k selection: x [rows, n] ->
     (values [rows, k], indices [rows, k] int32, ascending per row).
 
     With bucketed reductions (comm/bucket.py) a row is one whole flat
     bucket per learner — one tiled kernel pass instead of a ragged launch
-    per leaf.  The Pallas kernel accumulates indices through an fp32
-    matmul compaction, so rows are capped at 2**24 elements; keep
-    ``HierAvgParams.bucket_bytes`` at/below the 4 MiB default (1M fp32
-    elements, which also fits a row in VMEM) when targeting it.
+    per leaf.  ``compaction`` picks the Pallas compaction engine
+    (kernels/topk_compress.py): ``"scan"`` does O(n * block_n) work per
+    row — independent of k — via per-chunk cumsum + carried-offset
+    stores, and keeps indices in int32 so rows of any length are exact;
+    the legacy ``"onehot"`` engine does O(n * k) matmul scatters and
+    round-trips indices through fp32, capping rows at 2**24 elements —
+    that cap is enforced here, on the legacy path only.  The default
+    ``"auto"`` picks whichever tiles cheaper: ``"onehot"`` while
+    ``k < block_n`` and the row is under the legacy cap (its [block_n, k]
+    tile beats scan's fixed [block_n, block_n]), ``"scan"`` for large k
+    or long rows.
     """
     if impl == "xla":
         return kref.topk_compress_ref(x, k)
     n = x.shape[-1]
-    if n >= 2 ** 24:
+    if compaction == "auto":
+        compaction = "onehot" if (k < block_n and n < 2 ** 24) else "scan"
+    elif compaction == "onehot" and n >= 2 ** 24:
         raise ValueError(
-            f"pallas topk_compress rows are capped at 2**24 elements "
-            f"(fp32 index compaction), got n={n}; lower "
-            f"HierAvgParams.bucket_bytes or use impl='xla'")
+            f"pallas topk_compress compaction='onehot' caps rows at 2**24 "
+            f"elements (indices accumulate in fp32), got x shape "
+            f"{tuple(x.shape)} (n={n}); use compaction='scan', lower "
+            f"HierAvgParams.bucket_bytes, or fall back to impl='xla'")
     from repro.kernels.topk_compress import topk_compress as tk
-    return tk(x, k, block_n=block_n,
+    return tk(x, k, block_n=block_n, compaction=compaction,
               interpret=(impl == "pallas_interpret"))
 
 

@@ -1,31 +1,49 @@
 """Fused top-k compression (flatten -> abs -> threshold -> gather) as a
 Pallas TPU kernel — the sparse reducer's hot path (comm/sparse.py).
 
-TPU-native design (no sort): an exact top-k via
+TPU-native design (no global sort): an exact top-k via
   1. a 31-step binary search for the k-th magnitude in the fp32 *bit
      domain* — non-negative IEEE floats compare identically as int32, so
      building the threshold bit-by-bit distinguishes every representable
      magnitude (scale-free: a 1e8 outlier next to 1e-3 values costs no
      precision, unlike value-domain bisection) — pure VPU reductions over
      the row held in VMEM, then
-  2. compaction of the selected coordinates in index order: a cumulative
-     sum assigns each kept element its output slot and a chunked one-hot
-     matmul ([block_n, k] per chunk, MXU-friendly) scatters values and
-     indices into the [k]-wide outputs — no dynamic scatter needed.
+  2. compaction of the selected coordinates in index order.  Two
+     compaction engines:
+
+     * ``compaction="scan"`` — per-chunk local cumsum assigns
+       each kept element its slot *within the chunk*, a [block_n, block_n]
+       one-hot contraction packs the chunk's survivors to the front, and a
+       dynamic-slice store writes the packed (value, index) pairs at a
+       *carried offset* (the running count of survivors) into the k-wide
+       output; the next chunk's store overwrites the tail garbage.  Work
+       is O(n * block_n) per row — independent of k — and indices are
+       exact int32 (only the chunk-local offset, < block_n, rides the fp32
+       contraction), so rows are no longer capped at 2^24 elements.
+     * ``compaction="onehot"`` (legacy) — a chunked [block_n, k] one-hot
+       matmul scatters values and float-encoded indices straight into the
+       k-wide outputs: O(n * k) MXU work per row and an fp32 index
+       round-trip capping rows at 2^24 elements.  Kept as the reference
+       engine (kernels/ops.py gates its cap on this path only, and its
+       "auto" default dispatches here while k < block_n under the cap —
+       the [block_n, k] tile is cheaper than scan's fixed
+       [block_n, block_n] for small k).
 
 Grid = (rows,): one program per learner-row, whole row in VMEM (the
-per-leaf rows Hier-AVG produces are far below the ~16 MB VMEM budget; the
-chunking bounds the one-hot to block_n*k words).  Ties at the k-th
-magnitude resolve to the lowest indices, matching kernels/ref.py's oracle.
+per-bucket rows Hier-AVG produces are sized by ``bucket_bytes`` to fit the
+~16 MB VMEM budget; the chunking bounds each compaction tile to
+block_n^2 words).  Ties at the k-th magnitude resolve to the lowest
+indices, matching kernels/ref.py's oracle.
 
 Caveat: the selection is bit-exact, but subnormal *values* (< ~1.2e-38)
-flush to zero through the dot-product compaction (FTZ on the MXU and in the
+flush to zero through the packing contraction (FTZ on the MXU and in the
 XLA dot) — irrelevant for the EF reducer, whose residual re-accumulates
 anything dropped.
 
 Validated against ref.topk_compress_ref with interpret=True on CPU
 (tests/test_kernels.py), including a heavy-tailed row (1e8 outlier next to
-~1.0 values) that defeats value-domain bisection.
+~1.0 values) that defeats value-domain bisection and a >2^24-element row
+that defeats the legacy engine's fp32 index compaction.
 """
 from __future__ import annotations
 
@@ -42,9 +60,10 @@ from repro.kernels.compat import compiler_params
 _BISECT_ITERS = 31   # one per magnitude bit of a non-negative fp32
 
 
-def _topk_kernel(x_ref, vals_ref, idx_ref, *, n: int, k: int, block_n: int,
-                 n_pad: int):
-    x = x_ref[0, :].astype(jnp.float32)                     # [n_pad]
+def _threshold_select(x, n: int, n_pad: int, k: int):
+    """Shared selection logic: exact bit-domain k-th-magnitude bisection +
+    the tie-exact keep mask (ties break to the lowest indices, matching
+    lax.top_k).  Returns (gidx, keep) over the padded row."""
     gidx = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)[0]
     # |x| >= 0 has sign bit 0, so its int32 bit pattern orders identically;
     # padding gets -1 (int32), below every candidate threshold
@@ -69,6 +88,15 @@ def _topk_kernel(x_ref, vals_ref, idx_ref, *, n: int, k: int, block_n: int,
     eq = bits == t
     fill = k - jnp.sum(gt.astype(jnp.int32))
     keep = gt | (eq & (jnp.cumsum(eq.astype(jnp.int32)) <= fill))
+    return gidx, keep
+
+
+def _topk_kernel_onehot(x_ref, vals_ref, idx_ref, *, n: int, k: int,
+                        block_n: int, n_pad: int):
+    """Legacy compaction: chunked [block_n, k] one-hot matmuls — O(n*k)
+    MXU work per row, fp32 index accumulation (rows capped at 2^24)."""
+    x = x_ref[0, :].astype(jnp.float32)                     # [n_pad]
+    gidx, keep = _threshold_select(x, n, n_pad, k)
     slot = jnp.cumsum(keep.astype(jnp.int32)) - 1           # output position
 
     vals_ref[...] = jnp.zeros_like(vals_ref)
@@ -98,30 +126,101 @@ def _topk_kernel(x_ref, vals_ref, idx_ref, *, n: int, k: int, block_n: int,
     jax.lax.fori_loop(0, n_pad // block_n, chunk, 0)
 
 
+def _topk_kernel_scan(x_ref, vals_ref, idx_ref, *, n: int, k: int,
+                      block_n: int, n_pad: int):
+    """Scalable compaction: per-chunk local cumsum + carried offset.
+
+    Each chunk packs its survivors to the front (slot = chunk-local
+    cumsum; a [block_n, block_n] one-hot contraction, so the tile never
+    scales with k) and stores the packed block at the carried offset via
+    a dynamic-slice store.  Positions past this chunk's survivor count
+    hold garbage that the NEXT chunk's store overwrites; the outputs are
+    padded by one block (k_pad in the wrapper) so the final store never
+    clamps back onto finished entries.  Global indices are rebuilt as
+    ``chunk_base + local_offset`` in int32 — only the local offset
+    (< block_n) rides the fp32 contraction, so arbitrarily long rows keep
+    exact indices."""
+    x = x_ref[0, :].astype(jnp.float32)                     # [n_pad]
+    _, keep = _threshold_select(x, n, n_pad, k)
+
+    vals_ref[...] = jnp.zeros_like(vals_ref)
+    idx_ref[...] = jnp.zeros_like(idx_ref)
+    pcol = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_n), 1)
+    liota = jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)[0]
+
+    def chunk(c, off):
+        def sl(v):
+            return jax.lax.dynamic_slice_in_dim(v, c * block_n, block_n)
+
+        kc = sl(keep)
+        lslot = jnp.cumsum(kc.astype(jnp.int32)) - 1        # local cumsum
+        onehot = jnp.where((lslot[:, None] == pcol) & kc[:, None], 1.0, 0.0)
+        packed_v = jax.lax.dot_general(
+            sl(x)[None, :], onehot, (((1,), (0,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32)[0]          # [block_n]
+        packed_l = jax.lax.dot_general(
+            liota.astype(jnp.float32)[None, :], onehot,
+            (((1,), (0,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32)[0]          # exact: <block_n
+        packed_i = packed_l.astype(jnp.int32) + c * block_n
+        vals_ref[0, pl.ds(off, block_n)] = packed_v
+        idx_ref[0, pl.ds(off, block_n)] = packed_i
+        return off + jnp.sum(kc.astype(jnp.int32))
+
+    jax.lax.fori_loop(0, n_pad // block_n, chunk, jnp.int32(0))
+
+
 def topk_compress(x: jax.Array, k: int, *, block_n: int = 1024,
-                  interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+                  interpret: bool = False,
+                  compaction: str = "scan") -> Tuple[jax.Array, jax.Array]:
     """x [rows, n] -> (values [rows, k] in x.dtype, indices [rows, k] int32,
     ascending per row).  Matches ref.topk_compress_ref exactly (ties at the
-    k-th magnitude break to the lowest indices, like lax.top_k)."""
+    k-th magnitude break to the lowest indices, like lax.top_k).
+
+    ``compaction="scan"`` is the k-independent carried-offset engine;
+    ``"onehot"`` is the legacy O(n*k) matmul scatter (rows capped at
+    2^24 elements — enforce via kernels/ops.py, whose "auto" default
+    picks between them by k/block_n and row length).
+    """
     rows, n = x.shape
     assert 1 <= k <= n, (k, n)
-    assert n < 2 ** 24, "index compaction accumulates in fp32"
     block_n = min(block_n, n)
     n_pad = -(-n // block_n) * block_n
     if n_pad != n:
         x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
 
-    kernel = functools.partial(_topk_kernel, n=n, k=k, block_n=block_n,
-                               n_pad=n_pad)
-    vals, idxf = pl.pallas_call(
+    if compaction == "onehot":
+        assert n < 2 ** 24, "onehot compaction accumulates indices in fp32"
+        kernel = functools.partial(_topk_kernel_onehot, n=n, k=k,
+                                   block_n=block_n, n_pad=n_pad)
+        k_out = k
+    elif compaction == "scan":
+        kernel = functools.partial(_topk_kernel_scan, n=n, k=k,
+                                   block_n=block_n, n_pad=n_pad)
+        # one spare block: the last chunk's full-block store lands at
+        # offset <= k, so the outputs carry block_n tail slots of garbage
+        # that are sliced off below (never clamped back onto live entries)
+        k_out = k + block_n
+    else:
+        raise ValueError(
+            f"unknown compaction {compaction!r}; use 'scan' or 'onehot'")
+
+    vals, idx = pl.pallas_call(
         kernel,
         grid=(rows,),
         in_specs=[pl.BlockSpec((1, n_pad), lambda r: (r, 0))],
-        out_specs=[pl.BlockSpec((1, k), lambda r: (r, 0)),
-                   pl.BlockSpec((1, k), lambda r: (r, 0))],
-        out_shape=[jax.ShapeDtypeStruct((rows, k), jnp.float32),
-                   jax.ShapeDtypeStruct((rows, k), jnp.float32)],
+        out_specs=[pl.BlockSpec((1, k_out), lambda r: (r, 0)),
+                   pl.BlockSpec((1, k_out), lambda r: (r, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, k_out), jnp.float32),
+                   jax.ShapeDtypeStruct(
+                       (rows, k_out),
+                       jnp.float32 if compaction == "onehot" else jnp.int32)],
         compiler_params=compiler_params(("parallel",)),
         interpret=interpret,
     )(x)
-    return vals.astype(x.dtype), idxf.astype(jnp.int32)
+    if k_out != k:
+        vals = vals[:, :k]
+        idx = idx[:, :k]
+    return vals.astype(x.dtype), idx.astype(jnp.int32)

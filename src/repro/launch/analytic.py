@@ -149,11 +149,19 @@ def analytic_roofline(cfg: ArchConfig, shape_name: str, *,
                 parts["global_avg"] = (p_shard * _ring(P)) / bw / hier.k2
         else:
             # N-level plan: each level over its own link tier and its own
-            # compressed payload (reducer payload factor vs dense bf16)
-            from repro.core.theory import param_template
+            # compressed payload (reducer payload factor vs dense bf16).
+            # Pipelined levels (comm/bucket.py) overlap each bucket's
+            # collective with the next bucket's compress, so they expose
+            # max(compute, comm) per stage + the fill/drain ramp instead
+            # of the serial sum (same model as theory.plan_comm_per_round;
+            # the realistic-leaf template makes the bucket count honest).
+            from repro.core.theory import (CommModel, param_template,
+                                           scheduled_wall)
             plan = hier.resolved_plan
-            template = param_template(n_total)
+            template = param_template(
+                n_total, n_leaves=max(1, 8 * cfg.n_layers))
             dense_bytes = sum(2 * leaf.size for leaf in template.values())
+            compress_bw = CommModel().compress_bw
             sizes = {0: pods, 1: lay.groups, 2: lay.local}
             for lvl in plan.levels:
                 n = 1
@@ -164,8 +172,17 @@ def analytic_roofline(cfg: ArchConfig, shape_name: str, *,
                 crosses = 0 in lvl.axes and pods > 1
                 bw = DCI_BW if crosses else LINK_BW
                 factor = lvl.reducer.payload_bytes(template) / dense_bytes
-                parts[f"{lvl.name}_avg"] = \
-                    (p_shard * factor * _ring(n)) / bw / lvl.period
+                comm = p_shard * factor * _ring(n) / bw
+                m = lvl.reducer.n_messages(template)
+                s_cmp = (p_shard / compress_bw / m
+                         if getattr(lvl.reducer, "has_codec", True)
+                         else 0.0)
+                overlaps = getattr(lvl.reducer, "overlaps", False)
+                wall = scheduled_wall(s_cmp, comm / m, m, overlaps)
+                if overlaps and m > 1:
+                    det[f"overlap_x_{lvl.name}"] = \
+                        (comm + m * s_cmp) / wall
+                parts[f"{lvl.name}_avg"] = wall / lvl.period
         det["tokens_per_device"] = tokens_dev
         model_flops = mult * n_active * tokens_dev
     elif shape.kind == "prefill":

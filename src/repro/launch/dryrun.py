@@ -113,6 +113,9 @@ def main() -> None:
                     help="N-level reduction plan spec (wins over "
                          "--k1/--k2), e.g. "
                          "'local@4:cast:bfloat16/pod@8/global@16:topk:0.05'")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="pin the serial bucket schedule when lowering "
+                         "(default: pipelined/overlapped engine)")
     args = ap.parse_args()
 
     cases = []
@@ -135,12 +138,14 @@ def main() -> None:
         kw = {}
         if args.plan:
             from repro.configs.base import HierAvgParams
-            hp = HierAvgParams(plan=args.plan)
+            hp = HierAvgParams(plan=args.plan,
+                               overlap=not args.no_overlap)
             kw["hier"] = hp
             tag += "__P" + args.plan.replace("/", "-").replace(":", "_")
-        elif args.k1 or args.k2:
+        elif args.k1 or args.k2 or args.no_overlap:
             from repro.configs.base import HierAvgParams
-            hp = HierAvgParams(k1=args.k1 or 4, k2=args.k2 or 8)
+            hp = HierAvgParams(k1=args.k1 or 4, k2=args.k2 or 8,
+                               overlap=not args.no_overlap)
             kw["hier"] = hp
             tag += f"__K{hp.k1}-{hp.k2}"
         try:

@@ -52,6 +52,10 @@ def main() -> None:
                     default=DEFAULT_BUCKET_BYTES,
                     help="flat-buffer bucket cap for compressed reducers "
                          "(comm/bucket.py); 0 = per-leaf reductions")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="pin the serial bucket schedule (default: the "
+                         "pipelined engine overlaps each bucket's grouped "
+                         "collective with the next bucket's compress)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -63,7 +67,8 @@ def main() -> None:
     topo = HierTopology(pods=1, groups=args.learners // args.s,
                         local=args.s)
     hier = HierAvgParams(k1=args.k1, k2=args.k2, reducer=args.reducer,
-                         plan=args.plan, bucket_bytes=args.bucket_bytes)
+                         plan=args.plan, bucket_bytes=args.bucket_bytes,
+                         overlap=not args.no_overlap)
     plan = hier.resolved_plan
     bundle = build(cfg)
     optimizer = sgd(step_decay_lr(

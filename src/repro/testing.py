@@ -1,0 +1,79 @@
+"""Shared harness for the 8-host-device serial-vs-pipelined reduction
+A/B.
+
+benchmarks/bench_bucketing.py (the wall-clock/record rows) and
+tests/test_pipeline.py (the HLO overlap-structure assertions) must
+measure the SAME program — this module is the single builder both call,
+so the benchmarked reduction and the structurally-verified reduction
+cannot drift apart.
+
+Callers are responsible for forcing >= 8 host devices
+(``--xla_force_host_platform_device_count=8``) before jax initializes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.comm import Bucketed, Pipelined, get_reducer, reduce_with
+from repro.core import HierTopology
+from repro.core.topology import global_average, stack_like
+
+# the A/B shape: 24 leaves x 96*64 fp32 = 24 KiB each, stacked over the
+# 8-learner (1, 2, 4) mesh.  32 KiB cap -> 24 buckets (one leaf each);
+# 4 MiB cap -> 1 bucket (the schedules provably coincide).
+AB_LEAVES = 24
+AB_LEAF_SHAPE: Tuple[int, int] = (96, 64)
+AB_SMALL_CAP = 32 << 10
+AB_LARGE_CAP = 4 << 20
+
+
+def build_ab_reduction(sched: str, cap: int, *, n_leaves: int = AB_LEAVES,
+                       leaf_shape: Tuple[int, ...] = AB_LEAF_SHAPE,
+                       spec: str = "topk:0.05") -> Dict:
+    """One A/B variant: the jitted global reduction of a synthetic
+    ``n_leaves``-leaf tree over the 8-way learner mesh, on the serial
+    (``Bucketed``) or pipelined (``Pipelined``) schedule at bucket cap
+    ``cap``.  Returns the pieces both the benchmark and the HLO test
+    need: reducer, single-learner tree, stacked params, carried state,
+    shardings, the jitted fn, and the bucket count."""
+    topo = HierTopology(1, 2, 4)
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(topo.shape),
+                ("pod", "group", "local"))
+    key = jax.random.PRNGKey(0)
+    tree1 = {f"w{i:02d}": jax.random.normal(jax.random.fold_in(key, i),
+                                            leaf_shape)
+             for i in range(n_leaves)}
+    params = stack_like(topo, tree1)
+
+    def shard(leaf):
+        pspec = P("pod", "group", "local") if leaf.ndim >= 3 else P()
+        return NamedSharding(mesh, pspec)
+
+    engine = Pipelined if sched == "pipelined" else Bucketed
+    red = engine(get_reducer(spec), cap)
+    state = red.init_state(jax.tree.map(jnp.zeros_like, params))
+    shardings = (jax.tree.map(shard, params), jax.tree.map(shard, state))
+
+    def reduction(p, s):
+        return reduce_with(red, global_average, p, s)
+
+    return {
+        "reducer": red,
+        "tree1": tree1,
+        "params": params,
+        "state": state,
+        "shardings": shardings,
+        "fn": jax.jit(reduction, in_shardings=shardings),
+        "n_buckets": red.layout_for(params).n_buckets,
+    }
+
+
+def count_allreduce_ops(hlo_text: str) -> int:
+    """All-reduce ops in a compiled module (sync or async spelling) —
+    the program-size metric the A/B and the overlap test both gate on."""
+    return hlo_text.count("all-reduce(") + hlo_text.count("all-reduce-start(")

@@ -8,11 +8,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.comm import (Bucketed, BucketLayout, EFState, get_reducer,
-                        reduce_with)
+from repro.comm import (Bucketed, BucketLayout, EFState, Pipelined,
+                        get_reducer, reduce_with)
 from repro.configs.base import HierAvgParams
 from repro.core import (HierTopology, Simulator, global_average, init_state,
                         make_hier_round, resolve_plan)
+from repro.core.hier_avg import make_hier_step, shard_round_batch
 from repro.core.topology import stack_like
 from repro.optim import sgd
 
@@ -283,6 +284,265 @@ def test_init_state_spec_string_plan_matches_default_round(cls_task):
     assert len(jax.tree.leaves(perleaf.comm_state["global"].ref)) \
         == n_leaves
     assert len(jax.tree.leaves(state.comm_state["global"].ref)) < n_leaves
+
+
+# ----------------------- pipelined bucket schedule --------------------- #
+
+def test_uniform_layout_pads_groups_and_roundtrips():
+    """uniform=True (the pipelined engine's layout) pads every bucket of
+    a multi-bucket dtype group to the group max; single-bucket groups
+    keep their exact size; pack/unpack still round-trips."""
+    tree = _mixed_tree()
+    lay = BucketLayout.build(tree, bucket_bytes=64, uniform=True)
+    by_dtype = {}
+    for b in lay.buckets:
+        by_dtype.setdefault(b.dtype, []).append(b)
+    for dtype, group in by_dtype.items():
+        if len(group) > 1:
+            assert len({b.shape for b in group}) == 1     # rectangular
+            assert all(b.padded_size >= b.size for b in group)
+    back = lay.unpack(lay.pack(tree))
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    # ragged and uniform layouts agree when every group has one bucket
+    big = BucketLayout.build(tree, uniform=True)
+    assert [b.shape for b in big.buckets] \
+        == [b.shape for b in BucketLayout.build(tree).buckets]
+
+
+def test_shard_axes_bucketing_refuses_fsdp_layouts():
+    """Shard-aware bucketing stub: packing cross-shard (fsdp>1) leaves
+    into one bucket must refuse loudly, naming the layout."""
+    tree = _mixed_tree()
+    with pytest.raises(NotImplementedError, match="fsdp"):
+        BucketLayout.build(tree, shard_axes=("fsdp",))
+    # no shards -> unchanged behavior
+    assert BucketLayout.build(tree, shard_axes=()).n_leaves == 5
+
+
+def test_contradictory_schedule_modifiers_raise():
+    with pytest.raises(ValueError, match="contradictory"):
+        get_reducer("topk:0.05:perleaf:pipelined")
+    with pytest.raises(ValueError, match="contradictory"):
+        get_reducer("topk:0.05:pipelined:serial")
+
+
+@pytest.mark.parametrize("spec", ["mean", "cast:bfloat16"])
+def test_pipelined_bit_identical_to_serial_single_reduction(spec):
+    """Pipelining is a schedule change only: multi-bucket mean/cast
+    reductions are bit-identical serial vs pipelined."""
+    tree = _mixed_tree()
+    ser, _ = reduce_with(Bucketed(get_reducer(spec), 64), global_average,
+                         tree, ())
+    pip, _ = reduce_with(Pipelined(get_reducer(spec), 64), global_average,
+                         tree, ())
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(pip[k]),
+                                      np.asarray(ser[k]))
+
+
+def test_pipelined_cast_trajectory_bit_identical_to_serial(cls_task):
+    """Full-trajectory bit-exactness: a 3-level cast plan trained with
+    overlap on vs off (multi-bucket: tiny cap) gives byte-identical
+    params — pipelining must not change math."""
+    spec = "local@2:cast:bfloat16/pod@4/global@8:cast:bfloat16"
+    topo = HierTopology(2, 1, 2)
+    kw = dict(topo=topo, optimizer=sgd(0.05), seed=2,
+              eval_batch=cls_task["eval_batch"], per_learner_batch=8)
+    piped = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                      cls_task["sample"],
+                      hier=HierAvgParams(plan=spec, bucket_bytes=256,
+                                         overlap=True), **kw).run(3)
+    serial = Simulator(cls_task["loss_fn"], cls_task["init_fn"],
+                       cls_task["sample"],
+                       hier=HierAvgParams(plan=spec, bucket_bytes=256,
+                                          overlap=False), **kw).run(3)
+    np.testing.assert_array_equal(piped.losses, serial.losses)
+    for a, b in zip(jax.tree.leaves(piped.state.params),
+                    jax.tree.leaves(serial.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _run_steps(step_fn, state, shaped, k2):
+    flat = jax.tree.map(lambda x: x.reshape((k2,) + x.shape[2:]), shaped)
+    for t in range(k2):
+        state, _ = step_fn(state, jax.tree.map(lambda x: x[t], flat))
+    return state
+
+
+@pytest.mark.parametrize("spec", ["mean:bucketed", "cast:bfloat16"])
+def test_pipelined_step_api_bit_identical_to_serial(cls_task, spec):
+    """Per-API bit-exactness: the step-wise (lax.cond-masked) API under
+    the pipelined schedule == the same API under the serial schedule,
+    for mean/cast at a multi-bucket cap.  Pipelining must not change
+    math in either API.  (``mean:bucketed`` — not ``:pipelined``, which
+    would pin the engine and defeat the overlap toggle — resolves to
+    Pipelined with overlap=True and plain Bucketed with overlap=False.)"""
+    topo = HierTopology(1, 2, 2)
+    states, params = {}, {}
+    for overlap in (True, False):
+        h = HierAvgParams(k1=2, k2=4, reducer=spec, bucket_bytes=256,
+                          overlap=overlap)
+        opt = sgd(0.05)
+        step_fn = jax.jit(make_hier_step(cls_task["loss_fn"], opt, h))
+        s = init_state(topo, cls_task["init_fn"], opt,
+                       jax.random.PRNGKey(0), plan=h.resolved_plan)
+        batch = cls_task["sample"](jax.random.PRNGKey(1),
+                                   h.k2 * topo.n_learners * 8)
+        shaped = shard_round_batch(batch, h, topo)
+        params[overlap] = _run_steps(step_fn, s, shaped, h.k2).params
+    for a, b in zip(jax.tree.leaves(params[True]),
+                    jax.tree.leaves(params[False])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pipelined_step_api_matches_round_api_mean(cls_task):
+    """Step-wise counter masking and the scan-nest round agree for the
+    pipelined bucketed mean.  Across APIs the round program also runs
+    the (subsumed) local mean at the outer boundary — a float
+    reassociation of the same average, so the cross-API comparison is
+    allclose at fp32 resolution; bit-exactness is asserted WITHIN each
+    API by test_pipelined_step_api_bit_identical_to_serial and the
+    trajectory test above (pipelining itself changes nothing)."""
+    topo = HierTopology(1, 2, 2)
+    h = HierAvgParams(k1=2, k2=4, reducer="mean:pipelined",
+                      bucket_bytes=256)
+    opt = sgd(0.05)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    step_fn = jax.jit(make_hier_step(cls_task["loss_fn"], opt, h))
+    key = jax.random.PRNGKey(0)
+    s_round = init_state(topo, cls_task["init_fn"], opt, key,
+                         plan=h.resolved_plan)
+    s_step = init_state(topo, cls_task["init_fn"], opt, key,
+                        plan=h.resolved_plan)
+    batch = cls_task["sample"](jax.random.PRNGKey(1),
+                               h.k2 * topo.n_learners * 8)
+    shaped = shard_round_batch(batch, h, topo)
+    s_round, _ = round_fn(s_round, shaped)
+    s_step = _run_steps(step_fn, s_step, shaped, h.k2)
+    for a, b in zip(jax.tree.leaves(s_round.params),
+                    jax.tree.leaves(s_step.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_pipelined_topk_multibucket_trains_with_uniform_ef(cls_task):
+    """A 2-level plan with EF topk at both levels, forced multi-bucket
+    (tiny cap): the pipelined engine trains to consensus and carries
+    uniform (padded) bucket-space EF state."""
+    spec = "local@2:topk:0.5/global@4:topk:0.25"
+    topo = HierTopology(1, 2, 2)
+    h = HierAvgParams(plan=spec, bucket_bytes=256)
+    plan = h.resolved_plan
+    assert all(isinstance(l.reducer, Pipelined) for l in plan.levels)
+    opt = sgd(0.05)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    state = init_state(topo, cls_task["init_fn"], opt,
+                       jax.random.PRNGKey(0), plan=plan)
+    # multi-bucket, uniform within the f32 group
+    ef = state.comm_state["global"]
+    assert len(ef.ref) > 1
+    assert len({r.shape for r in ef.ref}) == 1
+    batch = cls_task["sample"](jax.random.PRNGKey(1),
+                               h.k2 * topo.n_learners * 8)
+    shaped = shard_round_batch(batch, h, topo)
+    state, metrics = round_fn(state, shaped)
+    assert np.isfinite(float(metrics["loss"]))
+    for leaf in jax.tree.leaves(state.params):
+        flat = leaf.reshape((topo.n_learners,) + leaf.shape[3:])
+        assert bool(jnp.allclose(flat, flat[0:1], atol=1e-6))
+    # a second round accepts the carried state (structure is stable)
+    state, metrics = round_fn(state, shaped)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_pipelined_overlap_mismatched_state_fails_loudly(cls_task):
+    """Serial-schedule EF state into a pipelined multi-bucket round (or
+    vice versa) trips the layout check, not silent misalignment."""
+    topo = HierTopology(1, 2, 2)
+    h = HierAvgParams(k1=2, k2=4, reducer="topk:0.25", bucket_bytes=72)
+    opt = sgd(0.05)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, h))
+    bad = init_state(topo, cls_task["init_fn"], opt, jax.random.PRNGKey(0),
+                     plan=resolve_plan(HierAvgParams(
+                         k1=2, k2=4, reducer="topk:0.25", bucket_bytes=72,
+                         overlap=False)))
+    batch = cls_task["sample"](jax.random.PRNGKey(1),
+                               h.k2 * topo.n_learners * 8)
+    shaped = shard_round_batch(batch, h, topo)
+    with pytest.raises((ValueError, TypeError)):
+        round_fn(bad, shaped)
+
+
+def test_overlap_false_demotes_auto_pipelined_plan(cls_task):
+    """The init_state escape hatch: re-resolving an already-pipelined
+    (auto, not ':pipelined'-pinned) plan with overlap=False demotes it
+    to the serial engine, so the state it builds matches a serial round
+    (regression: auto Pipelined wrappers were treated as explicit pins
+    and kept their uniform-padded layout)."""
+    from repro.core.plan import apply_bucketing
+    # resolved with overlap default on -> auto-Pipelined levels (cap 72)
+    h = HierAvgParams(k1=2, k2=4, reducer="topk:0.25", bucket_bytes=72)
+    resolved = resolve_plan(h)
+    assert all(isinstance(l.reducer, Pipelined) for l in resolved.levels)
+    demoted = apply_bucketing(resolved, 72, overlap=False)
+    assert all(type(l.reducer) is Bucketed for l in demoted.levels)
+    # ... while an explicit ':pipelined' pin survives the demotion
+    pinned = resolve_plan(HierAvgParams(
+        k1=2, k2=4, reducer="topk:0.25:pipelined", bucket_bytes=72))
+    assert all(isinstance(l.reducer, Pipelined)
+               for l in apply_bucketing(pinned, 72, overlap=False).levels)
+    # end to end: state built from the PIPELINED instance with
+    # overlap=False runs in a serial overlap=False round
+    topo = HierTopology(1, 2, 2)
+    hs = HierAvgParams(k1=2, k2=4, reducer="topk:0.25", bucket_bytes=72,
+                       overlap=False)
+    opt = sgd(0.05)
+    round_fn = jax.jit(make_hier_round(cls_task["loss_fn"], opt, hs))
+    state = init_state(topo, cls_task["init_fn"], opt,
+                       jax.random.PRNGKey(0), plan=resolved,
+                       bucket_bytes=72, overlap=False)
+    batch = cls_task["sample"](jax.random.PRNGKey(1),
+                               hs.k2 * topo.n_learners * 8)
+    shaped = shard_round_batch(batch, hs, topo)
+    state, metrics = round_fn(state, shaped)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_pipelined_qint8_reduces_within_quant_error():
+    """Stateless quantizing codec through the pipeline: the uniform
+    padding shifts qint8's block boundaries vs the ragged serial layout
+    (so no bit-exactness claim), but the reduction must still land
+    within the codec's per-block error bound of the true mean."""
+    tree = _mixed_tree()
+    dense, _ = reduce_with(get_reducer("mean"), global_average, tree, ())
+    pip, _ = reduce_with(Pipelined(get_reducer("qint8:32"), 64),
+                         global_average, tree, ())
+    for k in tree:
+        a = np.asarray(pip[k], np.float32)
+        b = np.asarray(dense[k], np.float32)
+        bound = np.abs(np.asarray(tree[k], np.float32)).max() / 100.0
+        np.testing.assert_allclose(a, b, atol=max(bound, 0.05))
+
+
+def test_pipelined_powersgd_falls_back_to_serial():
+    """Matrix-mode reducers (unsplittable warm-start state) run the
+    serial schedule inside Pipelined.reduce — same results as Bucketed."""
+    tree = _mixed_tree()
+    f32 = {k: v for k, v in tree.items() if v.dtype == jnp.float32}
+    ser_red = Bucketed(get_reducer("powersgd:2"), 64)
+    pip_red = Pipelined(get_reducer("powersgd:2"), 64)
+    zeros = jax.tree.map(jnp.zeros_like, f32)
+    ser, _ = reduce_with(ser_red, global_average, f32,
+                         ser_red.init_state(zeros))
+    pip, _ = reduce_with(pip_red, global_average, f32,
+                         pip_red.init_state(zeros))
+    for k in f32:
+        np.testing.assert_allclose(np.asarray(pip[k]), np.asarray(ser[k]),
+                                   rtol=1e-6, atol=1e-6)
 
 
 # ------------------------------ accounting ---------------------------- #

@@ -67,6 +67,7 @@ def test_flash_attention_blocks(block_q, block_k):
                                rtol=2e-5)
 
 
+@pytest.mark.parametrize("compaction", ["scan", "onehot"])
 @pytest.mark.parametrize("rows,n,k,block_n", [
     (1, 64, 1, 64),
     (5, 300, 30, 128),      # n not a block multiple -> padded tail
@@ -74,12 +75,15 @@ def test_flash_attention_blocks(block_q, block_k):
     (2, 128, 128, 64),      # k == n (everything transmitted)
     (4, 17, 3, 1024),       # block_n > n
 ])
-def test_topk_compress_interpret_matches_ref(rows, n, k, block_n):
+def test_topk_compress_interpret_matches_ref(rows, n, k, block_n,
+                                             compaction):
     """Fused threshold+compaction kernel == lax.top_k oracle (fp32 inputs
-    have no magnitude ties, so the selections agree exactly)."""
+    have no magnitude ties, so the selections agree exactly) — for both
+    the scalable carried-offset compaction and the legacy one-hot."""
     x = jax.random.normal(jax.random.PRNGKey(n + k), (rows, n))
     v_ref, i_ref = ref.topk_compress_ref(x, k)
-    v, i = ops.topk_compress(x, k, impl="pallas_interpret", block_n=block_n)
+    v, i = ops.topk_compress(x, k, impl="pallas_interpret", block_n=block_n,
+                             compaction=compaction)
     np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
     np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref), rtol=1e-6)
 
@@ -127,6 +131,68 @@ def test_topk_compress_indices_sorted_and_exact_k():
         i = np.asarray(i)
         assert (np.diff(i, axis=-1) > 0).all()        # strictly ascending
         assert v.shape == (4, 50) and i.shape == (4, 50)
+
+
+def test_topk_compress_row_cap_gated_on_legacy_compaction():
+    """The 2^24 flat-row cap belongs to the legacy one-hot compaction
+    (fp32 index accumulation); the scan compaction keeps exact int32
+    indices and must trace past it.  The error names the offending
+    shape."""
+    big = jax.ShapeDtypeStruct((2, 2 ** 24 + 64), jnp.float32)
+    with pytest.raises(ValueError, match=r"\(2, 16777280\)"):
+        jax.eval_shape(lambda x: ops.topk_compress(
+            x, 8, impl="pallas", compaction="onehot"), big)
+    # explicit scan AND the default auto dispatch trace past the cap
+    for compaction in ("scan", "auto"):
+        v, i = jax.eval_shape(lambda x, c=compaction: ops.topk_compress(
+            x, 8, impl="pallas", compaction=c), big)
+        assert v.shape == (2, 8) and i.shape == (2, 8)
+        assert i.dtype == jnp.int32
+
+
+@pytest.mark.slow
+def test_topk_compress_scan_row_beyond_2e24_interpret():
+    """The scalable compaction's whole point: a >2^24-element row with
+    outliers planted ABOVE 2^24 keeps exact indices (the legacy engine's
+    fp32 accumulation cannot represent them).  ~3 min in interpret mode
+    on 2 CPU cores — slow tier; scripts/test_fast.sh deselects it."""
+    n = 2 ** 24 + 4096
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, n), jnp.float32)
+    # plant magnitudes at high indices, including odd offsets a float
+    # rounds away (2^24 + 1 is the first unrepresentable int32 in fp32)
+    for j, off in enumerate((1, 3, 1001, 4095)):
+        x = x.at[0, 2 ** 24 + off].set(100.0 + j)
+    v_ref, i_ref = ref.topk_compress_ref(x, 64)
+    v, i = ops.topk_compress(x, 64, impl="pallas_interpret",
+                             compaction="scan")
+    assert int(np.asarray(i).max()) > 2 ** 24
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref), rtol=1e-6)
+
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as hst
+
+    @settings(deadline=None, max_examples=10)
+    @given(hst.integers(1, 4), hst.integers(1, 700), hst.integers(1, 100),
+           hst.sampled_from([64, 128, 1024]), hst.booleans())
+    def test_property_topk_scan_compaction_roundtrip(rows, n, k, block_n,
+                                                     heavy):
+        """Hypothesis sweep of the scan compaction against the oracle,
+        including heavy-tailed rows (1e8 outlier next to ~1 values)."""
+        k = min(k, n)
+        x = jax.random.normal(jax.random.PRNGKey(n * 31 + k), (rows, n))
+        if heavy:
+            x = x.at[:, n // 2].set(1e8)
+        v_ref, i_ref = ref.topk_compress_ref(x, k)
+        v, i = ops.topk_compress(x, k, impl="pallas_interpret",
+                                 block_n=block_n, compaction="scan")
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+        np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref),
+                                   rtol=1e-6)
+except ImportError:                                   # pragma: no cover
+    pass
 
 
 @pytest.mark.parametrize("b,s,h,d", [

@@ -71,11 +71,33 @@ def test_hier_params_plan_backfills_k1_k2():
 
 
 def test_resolve_plan_precedence():
+    from repro.comm import Pipelined
     h = HierAvgParams(k1=2, k2=4, reducer="qint8:128")
-    # compressed reducers are bucketed by default (comm/bucket.py)
+    # compressed reducers are bucketed by default (comm/bucket.py), on
+    # the pipelined (overlapped) schedule since HierAvgParams.overlap
+    # defaults on.  Auto-chosen engines describe as ':bucketed' (the
+    # engine is the knob's choice, not part of the spec), so the spec
+    # round-trips under any overlap setting; only an explicit
+    # ':pipelined' pin prints as one.
     p = resolve_plan(h)
+    assert all(isinstance(l.reducer, Pipelined) for l in p.levels)
     assert p.describe() == \
         "local@2:qint8:128:bucketed/global@4:qint8:128:bucketed"
+    # overlap=False pins the serial bucket schedule (PR 3 behavior)
+    hs = HierAvgParams(k1=2, k2=4, reducer="qint8:128", overlap=False)
+    ps = resolve_plan(hs)
+    assert not any(isinstance(l.reducer, Pipelined) for l in ps.levels)
+    assert ps.describe() == \
+        "local@2:qint8:128:bucketed/global@4:qint8:128:bucketed"
+    # ... as does the per-level ":serial" spec modifier
+    hser = HierAvgParams(k1=2, k2=4, reducer="qint8:128:serial")
+    assert resolve_plan(hser).describe() == \
+        "local@2:qint8:128:serial:bucketed/global@4:qint8:128:serial:bucketed"
+    # ... while an explicit ":pipelined" wins over overlap=False
+    hpipe = HierAvgParams(k1=2, k2=4, reducer="qint8:128:pipelined",
+                          overlap=False)
+    assert resolve_plan(hpipe).describe() == \
+        "local@2:qint8:128:pipelined/global@4:qint8:128:pipelined"
     # bucket_bytes=0 pins the legacy per-leaf pipeline
     h0 = HierAvgParams(k1=2, k2=4, reducer="qint8:128", bucket_bytes=0)
     assert resolve_plan(h0).describe() == \
@@ -88,8 +110,9 @@ def test_resolve_plan_precedence():
     assert resolve_plan(HierAvgParams(k1=2, k2=4)).describe() == \
         "local@2:mean/global@4:mean"
     # explicit reducer overrides every level (legacy single-reducer knob),
-    # then bucketing applies on top
+    # then bucketing applies on top (pipelined engine, auto -> ':bucketed')
     p2 = resolve_plan(h, reducer="cast:bfloat16")
+    assert all(isinstance(l.reducer, Pipelined) for l in p2.levels)
     assert all(l.reducer.describe() == "cast:bfloat16:bucketed"
                for l in p2.levels)
     # explicit plan wins over the config
