@@ -16,6 +16,7 @@ import json
 import os
 from typing import List
 
+from repro.autotune.calibrate import ENV_CALIBRATION, resolve_comm_model
 from repro.comm import DEFAULT_BUCKET_BYTES
 from repro.configs import ALL_ARCHS, get_config
 from repro.core.plan import ReductionPlan, apply_bucketing
@@ -31,12 +32,20 @@ PLAN_SPEC = "local@4:cast:bfloat16/pod@8:mean/global@16:topk:0.05"
 
 
 def run() -> List[Row]:
-    cm = CommModel()
+    # a calibration artifact ($REPRO_CALIBRATION, autotune/calibrate.py)
+    # swaps the built-in link/latency/codec constants for measured ones
+    cal = resolve_comm_model()
+    cm = cal or CommModel()
     # resolved like a round builder would: compressed levels bucketed on
     # the pipelined schedule, so the per-level rows carry the overlap term
     plan = apply_bucketing(ReductionPlan.parse(PLAN_SPEC),
                            DEFAULT_BUCKET_BYTES)
-    rows: List[Row] = []
+    rows: List[Row] = [(
+        "comm/model", 0.0,
+        (f"calibrated[{os.environ.get(ENV_CALIBRATION, '')}] "
+         if cal is not None else "builtin ")
+        + f"fast_bw={cm.fast_bw:.3e} slow_bw={cm.slow_bw:.3e} "
+        + f"latency={cm.latency:.2e} compress_bw={cm.compress_bw:.3e}")]
     for arch in ALL_ARCHS:
         cfg = get_config(arch)
         model_bytes = cfg.param_count() * 2          # bf16

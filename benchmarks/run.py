@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_comm        -> the paper's communication-saving claim, quantified
   bench_compression -> reducer sweep: payload bytes vs converged accuracy
   bench_bucketing   -> per-leaf vs bucketed reduction A/B (comm/bucket.py)
+  bench_autotune    -> probe -> calibrate -> recommend pipeline (autotune/)
   roofline          -> §Roofline rows from the dry-run artifacts (if present)
 
 ``bench_bucketing`` additionally writes machine-readable
@@ -17,7 +18,12 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
 payload_B, collectives; the serial-vs-pipelined A/B rows add n_buckets,
 compile_s, warm_us, min_us, speedup_vs_serial, same_hlo_as_serial) so
 successive PRs can track the reduction-path perf trajectory; CI uploads
-it as an artifact and fails if the A/B rows go missing.
+it as an artifact and fails if the A/B rows go missing.  Likewise
+``bench_autotune`` writes ``BENCH_autotune.json`` (the ``calibration``
+record with fitted CommModel constants + round-trip fit error, the
+``recommended/*`` plan-search records, and the ``controller/*`` adapted
+periods); CI runs its probe+calibrate smoke and fails if the calibration
+or recommended-plan records go missing.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig1] [--smoke]
 """
@@ -52,10 +58,10 @@ def main() -> None:
             os.environ.get("XLA_FLAGS", "")
             + " --xla_force_host_platform_device_count=8").strip()
 
-    from benchmarks import (bench_adaptive_k2, bench_bucketing, bench_comm,
-                            bench_compression, bench_k1_s, bench_k2,
-                            bench_large_proxy, bench_layouts, bench_vs_kavg,
-                            roofline)
+    from benchmarks import (bench_adaptive_k2, bench_autotune,
+                            bench_bucketing, bench_comm, bench_compression,
+                            bench_k1_s, bench_k2, bench_large_proxy,
+                            bench_layouts, bench_vs_kavg, roofline)
     suites = [
         ("bench_k2", bench_k2.run),
         ("bench_k1_s", bench_k1_s.run),
@@ -67,6 +73,8 @@ def main() -> None:
         ("bench_compression", bench_compression.run),
         ("bench_bucketing",
          lambda: bench_bucketing.run(smoke=args.smoke)),
+        ("bench_autotune",
+         lambda: bench_autotune.run(smoke=args.smoke)),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")
@@ -82,14 +90,16 @@ def main() -> None:
             failed += 1
             print(f"{name},0,ERROR", flush=True)
             traceback.print_exc()
-        if name == "bench_bucketing" and bench_bucketing.RECORDS:
+        records = {"bench_bucketing": (bench_bucketing, "BENCH_reduction"),
+                   "bench_autotune": (bench_autotune, "BENCH_autotune")}
+        if name in records and records[name][0].RECORDS:
             # smoke runs go to a sibling file so they never clobber the
             # checked-in full-round snapshot (README "Bucketed reductions")
-            fname = "BENCH_reduction.smoke.json" if args.smoke \
-                else "BENCH_reduction.json"
+            mod, stem = records[name]
+            fname = f"{stem}.smoke.json" if args.smoke else f"{stem}.json"
             out = os.path.join(_REPO_ROOT, fname)
             with open(out, "w") as f:
-                json.dump(bench_bucketing.RECORDS, f, indent=2)
+                json.dump(mod.RECORDS, f, indent=2)
             print(f"# wrote {out}", file=sys.stderr, flush=True)
     if failed:
         sys.exit(1)

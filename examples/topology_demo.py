@@ -4,6 +4,7 @@ and the per-level payload/cost table of a 3-level ReductionPlan.
 
     PYTHONPATH=src python examples/topology_demo.py
 """
+from repro.autotune.calibrate import resolve_comm_model
 from repro.configs import ALL_ARCHS, get_config
 from repro.core import HierTopology, ReductionPlan
 from repro.core.theory import (CommModel, comm_per_k2_steps, param_template,
@@ -11,7 +12,13 @@ from repro.core.theory import (CommModel, comm_per_k2_steps, param_template,
 
 print(f"{'arch':26s} {'params':>8s} {'layout G.S.F.TP':>16s} "
       f"{'learners/pod':>12s}  hier ms/step  kavg ms/step  saving")
-cm = CommModel()
+# $REPRO_CALIBRATION (autotune/calibrate.py) swaps in measured constants
+cal = resolve_comm_model()
+cm = cal or CommModel()
+if cal is not None:
+    print(f"[calibrated comm model: fast_bw={cm.fast_bw:.3e} "
+          f"slow_bw={cm.slow_bw:.3e} latency={cm.latency:.2e} "
+          f"compress_bw={cm.compress_bw:.3e}]")
 for arch in ALL_ARCHS:
     cfg = get_config(arch)
     lay = cfg.layout

@@ -1,0 +1,27 @@
+"""Autotune: close the loop between the analytic comm-cost stack and the
+hardware.
+
+``probe`` measures real grouped reductions (fresh subprocess per point,
+forced-host-device mesh); ``calibrate`` fits
+:class:`repro.core.theory.CommModel` from the samples and serializes a
+JSON calibration artifact (``$REPRO_CALIBRATION`` /
+``resolve_comm_model`` let bench_comm, the analytic roofline, and
+topology_demo cost with it instead of the built-in constants);
+``controller.CostAwarePlan`` adapts every reduction period — the pod
+level included — from the calibrated per-level cost ratios plus the
+loss ladder; ``search`` enumerates and ranks whole plans (periods x
+reducers per level) by calibrated wall-clock x the Thm-3.4 convergence
+objective, exposed as ``--autotune`` on launch/train.py and
+launch/dryrun.py and benchmarked by benchmarks/bench_autotune.py.
+"""
+from repro.autotune.calibrate import (CPU_MEDIAN_REL_ERR,  # noqa: F401
+                                      Calibration, calibrate_file,
+                                      fit_comm_model, predict_seconds,
+                                      resolve_calibration,
+                                      resolve_comm_model)
+from repro.autotune.controller import CostAwarePlan  # noqa: F401
+from repro.autotune.probe import (ProbePoint, default_grid,  # noqa: F401
+                                  load_samples, measure_point, run_probe)
+from repro.autotune.search import (ScoredPlan, SearchSpace,  # noqa: F401
+                                   enumerate_specs, recommend_plan,
+                                   search_plans)

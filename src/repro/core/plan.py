@@ -188,6 +188,20 @@ class ReductionPlan:
         outer = replace(self.levels[-1], period=period)
         return ReductionPlan(self.levels[:-1] + (outer,))
 
+    def with_periods(self, periods) -> "ReductionPlan":
+        """Same levels/reducers with EVERY period replaced (innermost
+        first) — the CostAwarePlan knob (autotune/controller.py).
+        Nesting (each period divides the next) is re-validated by the
+        constructor."""
+        periods = tuple(int(p) for p in periods)
+        if len(periods) != len(self.levels):
+            raise ValueError(
+                f"need {len(self.levels)} periods (one per level), "
+                f"got {periods}")
+        return ReductionPlan(tuple(
+            replace(lvl, period=p)
+            for lvl, p in zip(self.levels, periods)))
+
     def with_reducer(self, reducer) -> "ReductionPlan":
         """Same schedule with every level's reducer replaced (the legacy
         single-``reducer`` override)."""

@@ -10,6 +10,7 @@ reduction) while inner periods stay fixed — Jiang & Agrawal
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Optional, Union
@@ -83,8 +84,21 @@ class AdaptivePlan:
     def plan_for(self, loss: float) -> ReductionPlan:
         return self.plan.with_outer_period(self.outer_for(loss))
 
-    def params_for(self, loss: float) -> HierAvgParams:
-        return HierAvgParams(plan=self.plan_for(loss).describe())
+    def params_for(self, loss: float,
+                   base: Optional[HierAvgParams] = None) -> HierAvgParams:
+        """HierAvgParams for the current loss.  ``base`` carries every
+        non-schedule field (``bucket_bytes``, ``overlap``, ...) into the
+        result — only the plan is replaced.  Without it, defaults apply."""
+        spec = self.plan_for(loss).describe()
+        if base is None:
+            return HierAvgParams(plan=spec)
+        return dataclasses.replace(base, plan=spec)
+
+    def reset(self) -> None:
+        """Forget the loss anchor so the next ``*_for`` call re-anchors
+        the ladder — call between independent runs (``_loss0`` otherwise
+        carries over and a warm-started run never sees frac 1.0)."""
+        self._loss0 = None
 
 
 @dataclass
@@ -110,5 +124,15 @@ class AdaptiveK2:
     def k2_for(self, loss: float) -> int:
         return self._ctl.outer_for(loss)
 
-    def params_for(self, loss: float) -> HierAvgParams:
-        return HierAvgParams(k1=self.k1, k2=self.k2_for(loss))
+    def params_for(self, loss: float,
+                   base: Optional[HierAvgParams] = None) -> HierAvgParams:
+        """Legacy-trio params for the current loss; ``base`` (if given)
+        keeps its other fields via ``dataclasses.replace`` — ``plan`` is
+        cleared so the adapted (k1, k2) actually take effect."""
+        k2 = self.k2_for(loss)
+        if base is None:
+            return HierAvgParams(k1=self.k1, k2=k2)
+        return dataclasses.replace(base, k1=self.k1, k2=k2, plan=None)
+
+    def reset(self) -> None:
+        self._ctl.reset()

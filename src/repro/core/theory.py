@@ -128,6 +128,15 @@ def thm36_kavg_bound(K: int, alpha: float, eta: float,
 # Communication-cost model (the paper's motivation, made quantitative)
 # --------------------------------------------------------------------- #
 
+def tier_for(axes, pods: int) -> str:
+    """Link tier a reduction scope rides: ``"dci"`` iff it includes the
+    pod axis of a multi-pod topology, ``"ici"`` otherwise.  The ONE
+    classification rule — ``CommModel.bw_for_level`` bills with it and
+    the autotune probe labels its calibration samples with it, so the
+    fitted bandwidth columns cannot drift from the billed ones."""
+    return "dci" if (0 in tuple(axes) and pods > 1) else "ici"
+
+
 @dataclass(frozen=True)
 class CommModel:
     """Ring all-reduce cost model: reducing V bytes over n participants on a
@@ -154,9 +163,8 @@ class CommModel:
         return 2.0 * bytes_ * (n - 1) / (n * bw) + steps * self.latency
 
     def bw_for_level(self, axes, pods: int) -> float:
-        """Link tier a plan level rides: DCI iff its scope includes the pod
-        axis of a multi-pod topology, ICI otherwise."""
-        return self.slow_bw if (0 in tuple(axes) and pods > 1) \
+        """Link tier a plan level rides (see :func:`tier_for`)."""
+        return self.slow_bw if tier_for(axes, pods) == "dci" \
             else self.fast_bw
 
 
@@ -218,6 +226,43 @@ def scheduled_wall(stage_compute: float, stage_comm: float, messages: int,
     return messages * (stage_compute + stage_comm)
 
 
+def level_reduction_seconds(lvl, topo, template,
+                            cm: Optional[CommModel] = None
+                            ) -> Tuple[float, float, float]:
+    """The bill of ONE reduction at plan level ``lvl`` on ``topo``:
+    ``(comm_s, compute_s, scheduled_wall_s)`` — schedule-count
+    independent, so controllers (autotune/controller.py) can compare
+    levels without dividing a round bill back by ``counts_per_round``
+    (which is zero for a level subsumed by its outer neighbour).
+
+    ``comm_s`` is the wire time (fused-message ring + per-message ring
+    startups), ``compute_s`` the codec compute over the dense bytes, and
+    ``scheduled_wall_s`` what the level's actual schedule pays
+    (:func:`scheduled_wall`: pipelined levels overlap compute against
+    comm per bucket stage).  :func:`plan_comm_per_round` multiplies
+    these by the billable count per round."""
+    import jax
+    import jax.numpy as jnp
+    cm = cm or CommModel()
+    n = 1
+    for a in lvl.axes:
+        n *= topo.shape[a]
+    payload = lvl.reducer.payload_bytes(template)
+    messages = lvl.reducer.n_messages(template)
+    bw = cm.bw_for_level(lvl.axes, topo.pods)
+    dense_bytes = int(sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(template)))
+    comm_s = cm.allreduce_time(payload, n, bw) \
+        + (messages - 1) * 2 * (n - 1) * cm.latency
+    stage_compute = (dense_bytes / messages / cm.compress_bw
+                     if getattr(lvl.reducer, "has_codec", True) else 0.0)
+    compute_s = messages * stage_compute
+    wall_s = scheduled_wall(stage_compute, comm_s / messages, messages,
+                            getattr(lvl.reducer, "overlaps", False))
+    return comm_s, compute_s, wall_s
+
+
 def param_template(n_params: int, dtype="bfloat16", n_leaves: int = 1):
     """A square-ish single-learner matrix standing in for the model's
     parameters — what ``Reducer.payload_bytes`` needs to size a level's
@@ -268,13 +313,8 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
     instead of the serial ``sum`` for every stage.  With one message
     there is nothing to overlap and both forms coincide.
     """
-    import jax
-    import jax.numpy as jnp
     cm = cm or CommModel()
     counts = dict(plan.counts_per_round())
-    dense_bytes = int(sum(
-        leaf.size * jnp.dtype(leaf.dtype).itemsize
-        for leaf in jax.tree.leaves(template)))
     out = []
     for lvl in plan.levels:
         n = 1
@@ -284,23 +324,11 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
         messages = lvl.reducer.n_messages(template)
         bw = cm.bw_for_level(lvl.axes, topo.pods)
         count = counts[lvl.name]
-        # one fused message's bill + the extra per-message ring startups
-        per_reduction = cm.allreduce_time(payload, n, bw) \
-            + (messages - 1) * 2 * (n - 1) * cm.latency
-        secs = count * per_reduction
-        # per-stage split: comm and compute per bucket/message.  The
-        # identity mean has no codec, so its stages carry no
-        # overlappable compute
-        stage_comm = per_reduction / messages
-        stage_compute = (dense_bytes / messages / cm.compress_bw
-                         if getattr(lvl.reducer, "has_codec", True)
-                         else 0.0)
-        compute_s = count * messages * stage_compute
-        overlap_s = count * scheduled_wall(
-            stage_compute, stage_comm, messages,
-            getattr(lvl.reducer, "overlaps", False))
+        comm_s, compute_s, wall_s = level_reduction_seconds(
+            lvl, topo, template, cm)
         out.append(LevelCost(lvl.name, n, lvl.period, payload, count, bw,
-                             secs, messages, compute_s, overlap_s))
+                             count * comm_s, messages, count * compute_s,
+                             count * wall_s))
     return tuple(out)
 
 

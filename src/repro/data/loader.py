@@ -6,7 +6,11 @@ Responsibilities:
     assumption is realized exactly;
   * round batching — leaves shaped [*plan.batch_dims, pods, G, S, B, ...]
     to feed ``make_hier_round`` ([beta, K1, ...] for the 2-level plan);
-  * optional device placement with the launcher's NamedShardings.
+  * schedule-aware shard assignment — :func:`round_batch_shardings`
+    builds the NamedShardings for a round batch of ANY plan depth
+    (every caller used to hand-build the `(None,)*len(batch_dims)`
+    prefix per site, baked for the 2-/3-level layouts); optional device
+    placement with those (or the launcher's) NamedShardings.
 """
 from __future__ import annotations
 
@@ -14,9 +18,54 @@ from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import HierAvgParams
-from repro.core.topology import HierTopology
+from repro.core.topology import HierTopology, LEARNER_AXES
+
+
+def round_batch_pspec(batch_dims, leaf_ndim: int, mesh: Mesh,
+                      leaf_shape=None,
+                      data_axis: Optional[str] = "fsdp") -> P:
+    """PartitionSpec of one round-batch leaf under a plan of ANY depth.
+
+    The leading ``len(batch_dims)`` step axes (one per plan level —
+    however many the plan has) are replicated, the three stacked learner
+    axes shard over the mesh's learner axes, the per-learner example dim
+    over ``data_axis`` (when the mesh carries it), and trailing
+    per-example dims are replicated.  With ``leaf_shape`` given the spec
+    is divisibility-checked (``safe_pspec``)."""
+    n_lead = len(tuple(batch_dims))
+    if leaf_ndim < n_lead + len(LEARNER_AXES):
+        # refuse loudly rather than silently dropping learner axes off
+        # the spec and mis-sharding the leaf
+        raise ValueError(
+            f"round-batch leaf has {leaf_ndim} dims but the plan needs "
+            f"{n_lead} step dims + {len(LEARNER_AXES)} learner dims "
+            f"(batch_dims={tuple(batch_dims)})")
+    tail_names = (data_axis,) if (data_axis and data_axis
+                                  in mesh.shape) else ()
+    spec = ((None,) * n_lead + LEARNER_AXES + tail_names)
+    spec = spec + (None,) * (leaf_ndim - len(spec))
+    spec = P(*spec[:leaf_ndim])
+    if leaf_shape is not None:
+        from repro.parallel.sharding import safe_pspec
+        spec = safe_pspec(spec, tuple(leaf_shape), mesh)
+    return spec
+
+
+def round_batch_shardings(mesh: Mesh, hier: HierAvgParams, batch,
+                          data_axis: Optional[str] = "fsdp"):
+    """NamedShardings for a whole round batch (arrays or
+    ShapeDtypeStructs), generic in the plan depth via
+    ``hier.batch_dims``."""
+    dims = hier.batch_dims
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, round_batch_pspec(dims, leaf.ndim, mesh,
+                                    leaf_shape=leaf.shape,
+                                    data_axis=data_axis)),
+        batch)
 
 
 class HierDataLoader:
@@ -24,13 +73,18 @@ class HierDataLoader:
 
     def __init__(self, sample_fn: Callable, *, topo: HierTopology,
                  hier: HierAvgParams, per_learner_batch: int,
-                 seed: int = 0, shardings: Optional[Any] = None):
+                 seed: int = 0, shardings: Optional[Any] = None,
+                 mesh: Optional[Mesh] = None):
         self.sample = sample_fn
         self.topo = topo
         self.hier = hier
         self.B = per_learner_batch
         self.key = jax.random.PRNGKey(seed)
+        # explicit shardings win; with only a mesh the loader derives
+        # the schedule-aware ones from the first round's leaf shapes
+        # (round_batch_shardings — any plan depth)
         self.shardings = shardings
+        self.mesh = mesh
         self._round = 0
 
     @property
@@ -48,6 +102,9 @@ class HierDataLoader:
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *flat)
         batch = jax.tree.map(
             lambda x: x.reshape(shape + (self.B,) + x.shape[2:]), batch)
+        if self.shardings is None and self.mesh is not None:
+            self.shardings = round_batch_shardings(self.mesh, self.hier,
+                                                   batch)
         if self.shardings is not None:
             batch = jax.device_put(batch, self.shardings)
         return batch

@@ -10,7 +10,10 @@ supplies the ground truth for (a) the collective schedule — which ops, what
 payloads, which replica groups — and (b) lowering/memory feasibility.
 
 All terms are per-device, per-SGD-step (train) or per-decode-step/prefill,
-in seconds, using the assignment's v5e constants.
+in seconds, using the assignment's v5e constants.  A calibration artifact
+(autotune/calibrate.py; ``comm_model=`` arg or ``$REPRO_CALIBRATION``)
+replaces the link/codec constants with MEASURED ones for the reduction
+terms — the built-in numbers apply only when nothing is calibrated.
 
 Collective term components are itemized so §Perf can attack them:
   tp_act     — Megatron-style activation all-reduces over the TP axis
@@ -91,9 +94,34 @@ class Roofline:
 def analytic_roofline(cfg: ArchConfig, shape_name: str, *,
                       multi_pod: bool = False,
                       hier: Optional[HierAvgParams] = None,
-                      sliding_rolling: Optional[bool] = None) -> Roofline:
+                      sliding_rolling: Optional[bool] = None,
+                      comm_model=None) -> Roofline:
     shape = INPUT_SHAPES[shape_name]
     hier = hier or HierAvgParams(k1=4, k2=8)
+    # measured link/codec constants for the reduction terms.  An
+    # explicit CommModel wins wholesale; a Calibration — passed in
+    # (dryrun --autotune forwards the one the plan was chosen by) or
+    # configured via $REPRO_CALIBRATION — only displaces the constants
+    # it actually FITTED: its unfitted fields are CommModel base
+    # defaults, which differ from this module's v5e numbers (DCI_BW)
+    # and carry no measurement
+    from repro.autotune.calibrate import Calibration, resolve_calibration
+    ici_bw, dci_bw, codec_bw = LINK_BW, DCI_BW, None
+    cal = None
+    if comm_model is None:
+        cal = resolve_calibration()
+    elif isinstance(comm_model, Calibration):
+        cal = comm_model
+    else:
+        ici_bw, dci_bw = comm_model.fast_bw, comm_model.slow_bw
+        codec_bw = comm_model.compress_bw
+    if cal is not None:
+        if "fast_bw" in cal.fitted:
+            ici_bw = cal.model.fast_bw
+        if "slow_bw" in cal.fitted:
+            dci_bw = cal.model.slow_bw
+        if "compress_bw" in cal.fitted:
+            codec_bw = cal.model.compress_bw
     lay = cfg.layout
     pods = 2 if multi_pod else 1
     chips = pods * 256
@@ -142,10 +170,10 @@ def analytic_roofline(cfg: ArchConfig, shape_name: str, *,
             parts["fsdp"] = (2.0 * p_shard * micro * (fsdp - 1)) / LINK_BW
         if hier.plan is None:
             if S > 1:
-                bw = LINK_BW if lay.local > 1 else DCI_BW
+                bw = ici_bw if lay.local > 1 else dci_bw
                 parts["local_avg"] = (p_shard * _ring(S)) / bw / hier.k1
             if P > 1:
-                bw = DCI_BW if multi_pod else LINK_BW
+                bw = dci_bw if multi_pod else ici_bw
                 parts["global_avg"] = (p_shard * _ring(P)) / bw / hier.k2
         else:
             # N-level plan: each level over its own link tier and its own
@@ -161,7 +189,8 @@ def analytic_roofline(cfg: ArchConfig, shape_name: str, *,
             template = param_template(
                 n_total, n_leaves=max(1, 8 * cfg.n_layers))
             dense_bytes = sum(2 * leaf.size for leaf in template.values())
-            compress_bw = CommModel().compress_bw
+            compress_bw = codec_bw if codec_bw is not None \
+                else CommModel().compress_bw
             sizes = {0: pods, 1: lay.groups, 2: lay.local}
             for lvl in plan.levels:
                 n = 1
@@ -170,7 +199,7 @@ def analytic_roofline(cfg: ArchConfig, shape_name: str, *,
                 if n <= 1:
                     continue
                 crosses = 0 in lvl.axes and pods > 1
-                bw = DCI_BW if crosses else LINK_BW
+                bw = dci_bw if crosses else ici_bw
                 factor = lvl.reducer.payload_bytes(template) / dense_bytes
                 comm = p_shard * factor * _ring(n) / bw
                 m = lvl.reducer.n_messages(template)

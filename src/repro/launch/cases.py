@@ -150,15 +150,11 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
 
     batch_specs = {k: wrap(v) for k, v in inner.items()}
 
-    def bspec(s):
-        tail = ("fsdp",) + (None,) * (len(s.shape) - len(lead) - 1)
-        return safe_pspec(
-            P(*((None,) * len(plan.batch_dims)
-                + ("pod", "group", "local") + tail)),
-            s.shape, mesh)
-
-    batch_shardings = {k: NamedSharding(mesh, bspec(v))
-                       for k, v in batch_specs.items()}
+    # schedule-aware round-batch shardings, generic in the plan depth
+    # (data/loader.py owns the [*batch_dims, pod, group, local, fsdp]
+    # assignment — the loader and the lowered case cannot disagree)
+    from repro.data.loader import round_batch_shardings
+    batch_shardings = round_batch_shardings(mesh, hier, batch_specs)
 
     constraint_fn = None
     if use_constraints:

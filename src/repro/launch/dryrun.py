@@ -34,7 +34,7 @@ def applicable_shapes(cfg):
 
 
 def run_case(arch: str, shape: str, multi_pod: bool, *, case_kwargs=None,
-             layout=None) -> dict:
+             layout=None, calibration=None) -> dict:
     case_kwargs = case_kwargs or {}
     cfg = get_config(arch)
     if layout is not None:
@@ -83,9 +83,12 @@ def run_case(arch: str, shape: str, multi_pod: bool, *, case_kwargs=None,
         # trip-count blind); the analytic model below gives per-step
         # magnitudes — see launch/analytic.py and EXPERIMENTS.md §Roofline.
         "roofline_hlo_per_body": terms,
+        # --autotune: the artifact's roofline is costed with the SAME
+        # calibration the recommended plan was chosen by
         "roofline": analytic_roofline(
             cfg, shape, multi_pod=multi_pod,
-            hier=case_kwargs.get("hier")).as_dict(),
+            hier=case_kwargs.get("hier"),
+            comm_model=calibration).as_dict(),
     }
     return rec
 
@@ -116,6 +119,10 @@ def main() -> None:
     ap.add_argument("--no-overlap", action="store_true",
                     help="pin the serial bucket schedule when lowering "
                          "(default: pipelined/overlapped engine)")
+    ap.add_argument("--autotune", default=None, metavar="CALIB_JSON",
+                    help="calibration artifact (autotune/calibrate.py): "
+                         "lower the plan the cost-aware search recommends "
+                         "for each arch instead of --plan/--k1/--k2")
     args = ap.parse_args()
 
     cases = []
@@ -129,6 +136,13 @@ def main() -> None:
                 cases.append((a, s, mp))
 
     os.makedirs(args.out, exist_ok=True)
+    # --autotune: one artifact load, one plan search per (arch, layout,
+    # mesh) — the recommendation does not depend on the input shape
+    autotune_cal = None
+    autotune_memo = {}
+    if args.autotune:
+        from repro.autotune import Calibration
+        autotune_cal = Calibration.load(args.autotune)
     failures = 0
     for a, s, mp in cases:
         tag = f"{a}__{s}__{'2pod' if mp else '1pod'}"
@@ -136,7 +150,32 @@ def main() -> None:
         if lay is not None:
             tag += f"__L{args.layout.replace(':', 'm')}"
         kw = {}
-        if args.plan:
+        if args.autotune:
+            from repro.autotune import recommend_plan
+            from repro.configs.base import HierAvgParams
+            from repro.core.theory import param_template
+            from repro.core.topology import HierTopology
+            cfg = get_config(a)
+            layc = lay or cfg.layout
+            key = (a, args.layout, mp)
+            best = autotune_memo.get(key)
+            if best is None:
+                best = recommend_plan(
+                    HierTopology(pods=2 if mp else 1, groups=layc.groups,
+                                 local=layc.local),
+                    autotune_cal,
+                    template=param_template(
+                        cfg.param_count(),
+                        n_leaves=max(1, 8 * cfg.n_layers)),
+                    overlap=not args.no_overlap)
+                autotune_memo[key] = best
+                print(f"autotune {a}: {best.spec} "
+                      f"(comm_ms/step={best.comm_s_per_step * 1e3:.3f}, "
+                      f"feasible={best.feasible})", flush=True)
+            kw["hier"] = HierAvgParams(plan=best.spec,
+                                       overlap=not args.no_overlap)
+            tag += "__AUTO"
+        elif args.plan:
             from repro.configs.base import HierAvgParams
             hp = HierAvgParams(plan=args.plan,
                                overlap=not args.no_overlap)
@@ -149,7 +188,8 @@ def main() -> None:
             kw["hier"] = hp
             tag += f"__K{hp.k1}-{hp.k2}"
         try:
-            rec = run_case(a, s, mp, layout=lay, case_kwargs=kw)
+            rec = run_case(a, s, mp, layout=lay, case_kwargs=kw,
+                           calibration=autotune_cal)
             path = os.path.join(args.out, tag + ".json")
             with open(path, "w") as f:
                 json.dump(rec, f, indent=2)

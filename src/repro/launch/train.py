@@ -11,6 +11,7 @@ LR decay — is exercised for real.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -56,6 +57,11 @@ def main() -> None:
                     help="pin the serial bucket schedule (default: the "
                          "pipelined engine overlaps each bucket's grouped "
                          "collective with the next bucket's compress)")
+    ap.add_argument("--autotune", default=None, metavar="CALIB_JSON",
+                    help="calibration artifact (autotune/calibrate.py); "
+                         "runs the cost-aware plan search over the real "
+                         "param tree and trains the recommended plan — "
+                         "wins over --plan/--k1/--k2")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -69,8 +75,24 @@ def main() -> None:
     hier = HierAvgParams(k1=args.k1, k2=args.k2, reducer=args.reducer,
                          plan=args.plan, bucket_bytes=args.bucket_bytes,
                          overlap=not args.no_overlap)
-    plan = hier.resolved_plan
     bundle = build(cfg)
+    if args.autotune:
+        from repro.autotune import Calibration, search_plans
+        cal = Calibration.load(args.autotune)
+        template = jax.eval_shape(
+            bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        ranked = search_plans(topo, cal, template=template,
+                              B=args.batch,
+                              T_ref=args.rounds * hier.steps_per_round,
+                              bucket_bytes=hier.bucket_bytes,
+                              overlap=hier.overlap, top=3)
+        print(f"autotune [{args.autotune}; fitted {list(cal.fitted)}]:")
+        for i, sp in enumerate(ranked):
+            print(f"  #{i} {sp.spec}  comm_ms/step="
+                  f"{sp.comm_s_per_step * 1e3:.3f} score={sp.score:.3e} "
+                  f"feasible={sp.feasible}")
+        hier = dataclasses.replace(hier, plan=ranked[0].spec)
+    plan = hier.resolved_plan
     optimizer = sgd(step_decay_lr(
         args.lr, [args.rounds * hier.steps_per_round * 3 // 4], [0.1]))
 

@@ -5,7 +5,9 @@ benchmarks/bench_bucketing.py (the wall-clock/record rows) and
 tests/test_pipeline.py (the HLO overlap-structure assertions) must
 measure the SAME program — this module is the single builder both call,
 so the benchmarked reduction and the structurally-verified reduction
-cannot drift apart.
+cannot drift apart.  The autotune probe (autotune/probe.py) reuses the
+same builder with non-default ``topo_shape``/``level``/size arguments,
+so calibration samples measure the same reduction program too.
 
 Callers are responsible for forcing >= 8 host devices
 (``--xla_force_host_platform_device_count=8``) before jax initializes.
@@ -21,7 +23,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.comm import Bucketed, Pipelined, get_reducer, reduce_with
 from repro.core import HierTopology
-from repro.core.topology import global_average, stack_like
+from repro.core.topology import (global_average, local_average, pod_average,
+                                 stack_like)
+
+LEVEL_AVG_FNS = {
+    "local": local_average,
+    "pod": pod_average,
+    "global": global_average,
+}
 
 # the A/B shape: 24 leaves x 96*64 fp32 = 24 KiB each, stacked over the
 # 8-learner (1, 2, 4) mesh.  32 KiB cap -> 24 buckets (one leaf each);
@@ -34,16 +43,19 @@ AB_LARGE_CAP = 4 << 20
 
 def build_ab_reduction(sched: str, cap: int, *, n_leaves: int = AB_LEAVES,
                        leaf_shape: Tuple[int, ...] = AB_LEAF_SHAPE,
-                       spec: str = "topk:0.05") -> Dict:
-    """One A/B variant: the jitted global reduction of a synthetic
-    ``n_leaves``-leaf tree over the 8-way learner mesh, on the serial
-    (``Bucketed``) or pipelined (``Pipelined``) schedule at bucket cap
-    ``cap``.  Returns the pieces both the benchmark and the HLO test
+                       spec: str = "topk:0.05",
+                       topo_shape: Tuple[int, int, int] = (1, 2, 4),
+                       level: str = "global") -> Dict:
+    """One A/B variant: the jitted ``level`` reduction (local / pod /
+    global grouped mean) of a synthetic ``n_leaves``-leaf tree over the
+    ``topo_shape`` learner mesh, on the serial (``Bucketed``) or
+    pipelined (``Pipelined``) schedule at bucket cap ``cap``.  Returns
+    the pieces the benchmark, the HLO test, and the autotune probe all
     need: reducer, single-learner tree, stacked params, carried state,
     shardings, the jitted fn, and the bucket count."""
-    topo = HierTopology(1, 2, 4)
-    mesh = Mesh(np.array(jax.devices()[:8]).reshape(topo.shape),
-                ("pod", "group", "local"))
+    topo = HierTopology(*topo_shape)
+    mesh = Mesh(np.array(jax.devices()[:topo.n_learners])
+                .reshape(topo.shape), ("pod", "group", "local"))
     key = jax.random.PRNGKey(0)
     tree1 = {f"w{i:02d}": jax.random.normal(jax.random.fold_in(key, i),
                                             leaf_shape)
@@ -58,9 +70,10 @@ def build_ab_reduction(sched: str, cap: int, *, n_leaves: int = AB_LEAVES,
     red = engine(get_reducer(spec), cap)
     state = red.init_state(jax.tree.map(jnp.zeros_like, params))
     shardings = (jax.tree.map(shard, params), jax.tree.map(shard, state))
+    avg_fn = LEVEL_AVG_FNS[level]
 
     def reduction(p, s):
-        return reduce_with(red, global_average, p, s)
+        return reduce_with(red, avg_fn, p, s)
 
     return {
         "reducer": red,

@@ -262,6 +262,81 @@ def test_adaptive_plan_ladder():
     assert h.k2 == p_tiny.total_period
 
 
+def test_adaptive_plan_non_power_of_two_ratios():
+    """Ladder bounds that are not powers of two of each other: the outer
+    period stays in [outer_min, outer_max], a multiple of the next-inner
+    period, and monotone in the loss."""
+    ctl = AdaptivePlan("local@3/global@24")          # ratio 8, inner 3
+    assert ctl.outer_for(9.0) == 24
+    outs = [ctl.outer_for(9.0 * 2.0 ** -k) for k in range(6)]
+    assert outs[0] == 24 and outs[-1] == 3
+    for a, b in zip(outs, outs[1:]):
+        assert b <= a and b % 3 == 0 and 3 <= b <= 24
+    ctl2 = AdaptivePlan("local@5/global@20", outer_min=10)  # ratio 2
+    assert ctl2.outer_for(1.0) == 20
+    assert ctl2.outer_for(1e-6) == 10                 # floored at min
+    with pytest.raises(ValueError):                   # min below inner
+        AdaptivePlan("local@4/global@16", outer_min=2)
+    with pytest.raises(ValueError):                   # min not multiple
+        AdaptivePlan("local@4/global@16", outer_min=6)
+
+
+def test_adaptive_plan_outer_min_equals_outer_max():
+    """A ladder with no room: every loss maps to the one admissible
+    period (and nothing divides by zero on the degenerate span)."""
+    ctl = AdaptivePlan("local@4/global@4")
+    for loss in (100.0, 1.0, 1e-8):
+        assert ctl.outer_for(loss) == 4
+    ctl2 = AdaptivePlan("local@4/global@32", outer_min=32)
+    for loss in (100.0, 1.0, 1e-8):
+        assert ctl2.outer_for(loss) == 32
+
+
+def test_adaptive_plan_loss_anchor_carry_and_reset():
+    """_loss0 anchors on the FIRST observed loss and carries across
+    params_for calls; reset() re-anchors for a fresh run."""
+    ctl = AdaptivePlan("local@4/global@64")
+    assert ctl.params_for(8.0).k2 == 64              # anchor = 8.0
+    assert ctl.params_for(1.0).k2 < 64               # 1/8 of anchor
+    # a later HIGHER loss does not move the anchor (frac capped at 1)
+    assert ctl.params_for(80.0).k2 == 64
+    assert ctl._loss0 == 8.0
+    ctl.reset()
+    assert ctl._loss0 is None
+    # the same small loss is now the anchor -> wide interval again
+    assert ctl.params_for(1.0).k2 == 64
+    # AdaptiveK2 delegates
+    from repro.core import AdaptiveK2
+    k2ctl = AdaptiveK2(k1=4, k2_max=64)
+    assert k2ctl.k2_for(4.0) == 64 and k2ctl.k2_for(0.05) < 64
+    k2ctl.reset()
+    assert k2ctl.k2_for(0.05) == 64
+
+
+def test_adaptive_params_for_preserves_base_fields():
+    """params_for(loss, base=...) keeps the caller's non-schedule fields
+    (bucket_bytes / overlap / reducer) via dataclasses.replace instead
+    of silently resetting them to defaults."""
+    base = HierAvgParams(k1=4, k2=64, reducer="qint8:128",
+                         bucket_bytes=512 << 10, overlap=False)
+    ctl = AdaptivePlan("local@4:topk:0.1/global@64:topk:0.1")
+    h = ctl.params_for(5.0, base=base)
+    assert (h.bucket_bytes, h.overlap) == (512 << 10, False)
+    assert h.plan is not None and h.k2 == 64 and h.k1 == 4
+    # the adapted plan's reducers win over base.reducer (plan is set)
+    assert "topk:0.1" in h.resolved_plan.levels[-1].reducer.describe()
+    from repro.core import AdaptiveK2
+    k2ctl = AdaptiveK2(k1=4, k2_max=32)
+    base2 = HierAvgParams(plan="local@2/global@8", bucket_bytes=0,
+                          overlap=False)
+    h2 = k2ctl.params_for(3.0, base=base2)
+    # plan cleared so the adapted (k1, k2) actually take effect
+    assert h2.plan is None and (h2.k1, h2.k2) == (4, 32)
+    assert (h2.bucket_bytes, h2.overlap) == (0, False)
+    # legacy no-base path unchanged
+    assert ctl.params_for(5.0).bucket_bytes != 0
+
+
 def test_adaptive_k2_delegates_to_plan_ladder():
     """The legacy AdaptiveK2 API is the 2-level specialization."""
     from repro.core import AdaptiveK2

@@ -98,6 +98,53 @@ def test_loader_shapes_and_independence():
                                np.asarray(ld2.next_round()["x"]))
 
 
+def test_round_batch_shardings_any_plan_depth():
+    """Schedule-aware shard assignment (data/loader.py) is generic in
+    the plan depth: the leading step-axis prefix tracks len(batch_dims)
+    for 1-, 2-, and 3-level plans — and for deeper hypothetical
+    schedules — instead of a baked <=3-entry prefix."""
+    from jax.sharding import PartitionSpec as P
+    from repro.data.loader import (round_batch_pspec,
+                                   round_batch_shardings)
+    mesh = jax.make_mesh((1, 1, 1, 1), ("pod", "group", "local", "fsdp"))
+    plans = {"local@4": 1, "local@2/global@4": 2,
+             "local@2/pod@4/global@8": 3}
+    for spec, depth in plans.items():
+        hier = HierAvgParams(plan=spec)
+        assert len(hier.batch_dims) == depth
+        leaf_ndim = depth + 3 + 1 + 1        # steps + learners + B + feat
+        ps = round_batch_pspec(hier.batch_dims, leaf_ndim, mesh)
+        assert tuple(ps) == ((None,) * depth
+                             + ("pod", "group", "local", "fsdp", None))
+    # deeper than any named plan today: the prefix still tracks the dims
+    deep_dims = (2, 2, 2, 2, 2)
+    ps = round_batch_pspec(deep_dims, len(deep_dims) + 4, mesh)
+    assert tuple(ps) == ((None,) * 5 + ("pod", "group", "local", "fsdp"))
+    # meshes without an fsdp axis just drop the example-dim shard
+    mesh3 = jax.make_mesh((1, 1, 1), ("pod", "group", "local"))
+    ps3 = round_batch_pspec((2, 2), 7, mesh3)
+    assert tuple(ps3) == (None, None, "pod", "group", "local", None, None)
+    # non-divisible dims are dropped by the safety net, not crashed on
+    ps_safe = round_batch_pspec((2,), 5, mesh3, leaf_shape=(2, 1, 1, 1, 7))
+    assert isinstance(ps_safe, P)
+    # a leaf too short for the step+learner prefix is refused loudly,
+    # never silently mis-sharded with truncated learner axes
+    with pytest.raises(ValueError):
+        round_batch_pspec((2, 2), 4, mesh3)
+    # end-to-end: a loader given only the mesh derives the shardings and
+    # places a 3-level round batch
+    topo = HierTopology(1, 1, 1)
+    hier = HierAvgParams(plan="local@1/pod@2/global@4")
+    ld = HierDataLoader(make_classification_task(8, 3), topo=topo,
+                        hier=hier, per_learner_batch=4, seed=0, mesh=mesh)
+    rb = ld.next_round()
+    assert rb["x"].shape == (2, 2, 1, 1, 1, 1, 4, 8)
+    assert ld.shardings is not None
+    assert tuple(ld.shardings["x"].spec)[:3] == (None, None, None)
+    shards = round_batch_shardings(mesh, hier, rb)
+    assert shards["x"].mesh.shape == mesh.shape
+
+
 # --------------------------- checkpoint ------------------------------ #
 
 def test_checkpoint_roundtrip(tmp_path):
