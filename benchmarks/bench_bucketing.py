@@ -26,6 +26,15 @@ this module does the same standalone):
    ``topk:0.05:pipelined`` record carries ``speedup_vs_serial`` — the
    acceptance bar is >= 1.2x over the serial baseline at the same cap.
 
+3. **Sharded RS/AG A/B** (the fsdp>1 rows): the same global reduction
+   with every learner 2-way fsdp-sharded (4 learners x 2 shards = the
+   same 8 host devices) vs the replicated baseline at the same learner
+   topology.  The sharded rows record the collective op mix (zero bucket
+   all-reduces; reduce-scatter + all-gather instead) and
+   ``wire_payload_B`` — the per-host wire bytes, half the replicated
+   payload because each host compresses and ships only its own shard
+   slice.
+
 ``run(smoke=True)`` (CI) does 2 rounds instead of 12.  Machine-readable
 records for BENCH_reduction.json are left in ``RECORDS``.
 
@@ -81,7 +90,8 @@ ROUNDS = 12
 # one compress/collective chain per bucket, the pipeline one scan body)
 # dominates that noise.
 from repro.testing import (AB_LARGE_CAP, AB_SMALL_CAP,  # noqa: E402
-                           build_ab_reduction, count_allreduce_ops)
+                           build_ab_reduction, build_sharded_ab_reduction,
+                           count_allreduce_ops, count_collective_ops)
 
 # machine-readable rows for BENCH_reduction.json (benchmarks/run.py)
 RECORDS: List[Dict] = []
@@ -114,16 +124,21 @@ def _hlo_collectives(reducer, init_fn) -> int:
     return summary.get("all-reduce", {}).get("count", 0)
 
 
-def _ab_measure(sched: str, cap: int, rounds: int) -> Dict:
+def _ab_measure(sched: str, cap: int, rounds: int, *,
+                sharded: bool = False, topo_shape=None) -> Dict:
     """One A/B variant, measured in THIS process (the child side of the
     subprocess-per-variant harness): build the shared reduction
     (repro.testing — same program tests/test_pipeline.py verifies),
     compile, execute ``rounds`` times.  ``us`` is
     (compile + executions) / rounds — compile included, like every other
     row in this harness; ``warm_us``/``min_us`` summarize the per-round
-    executions."""
+    executions.  ``sharded=True`` builds the fsdp=2 variant (same
+    builder tests/test_sharded.py verifies) whose buckets reduce via
+    reduce-scatter + all-gather instead of all-reduce."""
     import hashlib
-    b = build_ab_reduction(sched, cap)
+    build = build_sharded_ab_reduction if sharded else build_ab_reduction
+    kw = {"topo_shape": tuple(topo_shape)} if topo_shape else {}
+    b = build(sched, cap, **kw)
     p_sh = jax.device_put(b["params"], b["shardings"][0])
     s_sh = jax.device_put(b["state"], b["shardings"][1])
 
@@ -140,10 +155,16 @@ def _ab_measure(sched: str, cap: int, rounds: int) -> Dict:
         per_exec.append(time.time() - t1)
     us = (compile_s + sum(per_exec)) / rounds * 1e6
     txt = compiled.as_text()
+    ops = count_collective_ops(txt)
     return {
         "us": round(us, 1),
         "payload_B": b["reducer"].payload_bytes(b["tree1"]),
+        # what actually crosses the wire per host: == payload_B when
+        # replicated, payload_B / shards for the sharded rows
+        "wire_payload_B": b["reducer"].wire_payload_bytes(b["tree1"]),
         "collectives": count_allreduce_ops(txt),
+        "reduce_scatter": ops["reduce_scatter"],
+        "all_gather": ops["all_gather"],
         "n_buckets": b["n_buckets"],
         "compile_s": round(compile_s, 2),
         "warm_us": round(float(np.median(per_exec)) * 1e6, 1),
@@ -209,6 +230,58 @@ def _reduction_ab(rounds: int) -> List[Row]:
     return rows
 
 
+def _sharded_ab(rounds: int) -> List[Row]:
+    """All-reduce vs reduce-scatter+all-gather A/B at the SAME 4-learner
+    topology: the fsdp=1 replicated baseline reduces full buckets with
+    grouped all-reduces; the fsdp=2 rows (4 learners x 2 shards, all 8
+    host devices) must show zero bucket all-reduces, reduce-scatter +
+    all-gather instead, and half the wire payload (each host ships only
+    the shard slice it owns).  Fresh subprocess per variant, same
+    harness rationale as :func:`_reduction_ab`."""
+    import subprocess
+    import sys
+
+    rows: List[Row] = []
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+
+    variants = (
+        # replicated baseline on the sharded rows' learner topology
+        ("topk:0.05:serial@4L",
+         ["--ab-variant", "serial", "--ab-topo", "1,2,2"]),
+        ("topk:0.05:serial:sharded",
+         ["--ab-variant", "serial", "--ab-sharded"]),
+        ("topk:0.05:pipelined:sharded",
+         ["--ab-variant", "pipelined", "--ab-sharded"]),
+    )
+    for name, extra in variants:
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_bucketing", *extra,
+             "--ab-cap", str(AB_SMALL_CAP), "--rounds", str(rounds)],
+            env=env, cwd=repo, capture_output=True, text=True,
+            timeout=900)
+        if r.returncode != 0:
+            rows.append((f"bucketing/sharded/{name}", 0.0,
+                         "ERROR " + r.stderr.strip()[-200:]))
+            continue
+        rec = json.loads(r.stdout.strip().splitlines()[-1])
+        rec.pop("hlo_md5", None)
+        rec["name"] = name
+        RECORDS.append(rec)
+        derived = (f"n_buckets={rec['n_buckets']} "
+                   f"all_reduce={rec['collectives']} "
+                   f"rs={rec['reduce_scatter']} ag={rec['all_gather']} "
+                   f"wire_B={rec['wire_payload_B']} "
+                   f"payload_B={rec['payload_B']}")
+        rows.append((f"bucketing/sharded/{name}", rec["us"], derived))
+    return rows
+
+
 def run(smoke: bool = False) -> List[Row]:
     RECORDS.clear()
     setup = cls_setup(hidden=HIDDEN)
@@ -232,6 +305,7 @@ def run(smoke: bool = False) -> List[Row]:
         RECORDS.append({"name": name, "us": round(us, 1),
                         "payload_B": payload, "collectives": colls})
     rows.extend(_reduction_ab(rounds))
+    rows.extend(_sharded_ab(rounds))
     return rows
 
 
@@ -244,11 +318,20 @@ if __name__ == "__main__":
                     default=None, help="child mode: measure ONE "
                     "reduction-schedule variant and print a json record")
     ap.add_argument("--ab-cap", type=int, default=AB_SMALL_CAP)
+    ap.add_argument("--ab-sharded", action="store_true",
+                    help="child mode: measure the fsdp=2 sharded variant "
+                         "(reduce-scatter + all-gather buckets)")
+    ap.add_argument("--ab-topo", default=None,
+                    help="child mode: learner topology override, e.g. "
+                         "'1,2,2' for the 4-learner replicated baseline")
     ap.add_argument("--rounds", type=int, default=ROUNDS)
     args = ap.parse_args()
     if args.ab_variant:
+        topo = tuple(int(x) for x in args.ab_topo.split(",")) \
+            if args.ab_topo else None
         print(json.dumps(_ab_measure(args.ab_variant, args.ab_cap,
-                                     args.rounds)))
+                                     args.rounds, sharded=args.ab_sharded,
+                                     topo_shape=topo)))
     else:
         for n, us, d in run(smoke=args.smoke):
             print(f"{n},{us:.0f},{d}")

@@ -16,7 +16,10 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
 ``bench_bucketing`` additionally writes machine-readable
 ``BENCH_reduction.json`` at the repo root (schema per row: name, us,
 payload_B, collectives; the serial-vs-pipelined A/B rows add n_buckets,
-compile_s, warm_us, min_us, speedup_vs_serial, same_hlo_as_serial) so
+compile_s, warm_us, min_us, speedup_vs_serial, same_hlo_as_serial; the
+sharded fsdp=2 A/B rows add wire_payload_B plus reduce_scatter /
+all_gather op counts — CI asserts zero bucket all-reduces and half the
+replicated wire payload on those) so
 successive PRs can track the reduction-path perf trajectory; CI uploads
 it as an artifact and fails if the A/B rows go missing.  Likewise
 ``bench_autotune`` writes ``BENCH_autotune.json`` (the ``calibration``

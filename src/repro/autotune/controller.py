@@ -89,6 +89,10 @@ class CostAwarePlan:
     max_gap: int = 64
     bucket_bytes: int = DEFAULT_BUCKET_BYTES
     overlap: bool = True
+    # parallel/sharding.py ShardPlan for fsdp>1 meshes: the resolved
+    # engines then bill the reduce-scatter/all-gather wire bytes
+    # (payload/F per sharded bucket) instead of the replicated payload
+    shards: Any = None
     _ladder: AdaptivePlan = field(init=False, repr=False)
 
     def __post_init__(self):
@@ -108,7 +112,7 @@ class CostAwarePlan:
         # lifetime; compute once instead of re-walking the template
         # every params_for call of a training loop
         resolved = apply_bucketing(self.plan, self.bucket_bytes,
-                                   self.overlap)
+                                   self.overlap, shards=self.shards)
         self._level_costs = tuple(
             level_reduction_seconds(lvl, self.topo, self.template,
                                     self.comm)[2]

@@ -156,6 +156,12 @@ def measure_point(point: ProbePoint, reps: int = 12) -> Dict:
         "tier": tier_for(LEVEL_AXES[point.level], pods),
         "dense_bytes": dense,
         "payload_bytes": int(red.payload_bytes(tree1)),
+        # per-device bytes on the wire — differs from payload_bytes only
+        # for fsdp-sharded layouts (reduce-scatter/all-gather moves 1/F
+        # of each sharded bucket); the default grid is fsdp=1 so the
+        # calibration fit is unchanged, but the field keeps the billed
+        # quantity visible in every probe artifact
+        "wire_bytes": int(red.wire_payload_bytes(tree1)),
         "messages": int(red.n_messages(tree1)),
         "has_codec": bool(getattr(red, "has_codec", True)),
         "reps": reps,

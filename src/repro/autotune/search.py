@@ -96,6 +96,7 @@ def search_plans(topo: HierTopology,
                  step_s: float = 0.0,
                  bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                  overlap: bool = True,
+                 shards: Any = None,
                  top: Optional[int] = None) -> List[ScoredPlan]:
     """Rank the candidate grid; best (lowest score, feasible first)
     first.  ``gamma``/``L``/``M``/``F1_minus_Fstar`` are the Thm 3.4
@@ -108,7 +109,10 @@ def search_plans(topo: HierTopology,
     them (and like bench_comm costs) — so codec candidates get their
     bucketed message counts and overlap credit, not a per-leaf serial
     bill the trained plan never pays.  The returned ``spec`` stays the
-    raw plan string (resolution re-applies at build time)."""
+    raw plan string (resolution re-applies at build time).  ``shards``
+    (parallel/sharding.py ShardPlan) bills fsdp>1 candidates at their
+    reduce-scatter/all-gather wire bytes (payload/F per sharded
+    bucket)."""
     if isinstance(comm, Calibration):
         comm = comm.model
     cm = comm or CommModel()
@@ -121,7 +125,8 @@ def search_plans(topo: HierTopology,
     out: List[ScoredPlan] = []
     for spec in enumerate_specs(space):
         plan = ReductionPlan.parse(spec)
-        resolved = apply_bucketing(plan, bucket_bytes, overlap)
+        resolved = apply_bucketing(plan, bucket_bytes, overlap,
+                                   shards=shards)
         costs = plan_comm_per_round(resolved, topo, template, cm)
         comm_per_step = sum(c.overlap_s for c in costs) / plan.total_period
         k1 = plan.levels[0].period

@@ -4,9 +4,13 @@ save_checkpoint writes:
   <dir>/manifest.json   — tree structure, shapes, dtypes, step, user metadata
   <dir>/arrays.npz      — leaves keyed by their flattened path
 
-restore_checkpoint(dir, like=...) re-places each leaf with the sharding of
-the matching leaf in ``like`` (so a checkpoint taken on one mesh restores
-onto another — resharding happens in device_put).
+restore_checkpoint(dir, like=...) validates every restored array against
+the manifest AND against ``like`` (exact path set, shape, dtype — any
+mismatch raises naming the offending leaf; nothing is silently cast),
+then re-places each leaf: onto the ``shardings=`` override if given, else
+onto the matching ``like`` leaf's mesh-backed sharding (so a checkpoint
+taken on one mesh restores onto another — resharding happens in
+device_put), else onto a concrete ``like`` leaf's committed placement.
 """
 from __future__ import annotations
 
@@ -59,22 +63,94 @@ def checkpoint_step(path: str) -> int:
         return json.load(f)["step"]
 
 
-def restore_checkpoint(path: str, like: Any) -> Any:
-    """Restore into the structure (and shardings, if any) of ``like``."""
+def _validate_manifest(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    """Cross-check arrays.npz against manifest.json: same leaf set, and
+    each array's shape/dtype matches what the manifest recorded at save
+    time.  Any drift means on-disk corruption (truncated npz, manifest
+    from a different run) and raises naming the offending leaf."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        entries = {e["path"]: e for e in json.load(f)["entries"]}
+    man_only = sorted(set(entries) - set(arrays))
+    npz_only = sorted(set(arrays) - set(entries))
+    if man_only or npz_only:
+        raise ValueError(
+            f"corrupt checkpoint at '{path}': manifest.json and "
+            f"arrays.npz disagree (manifest-only leaves: {man_only}, "
+            f"npz-only leaves: {npz_only})")
+    for key, e in entries.items():
+        arr = arrays[key]
+        if (list(arr.shape) != list(e["shape"])
+                or str(arr.dtype) != e["dtype"]):
+            raise ValueError(
+                f"corrupt checkpoint at '{path}': leaf '{key}' is "
+                f"{arr.dtype}{tuple(arr.shape)} in arrays.npz but the "
+                f"manifest records "
+                f"{e['dtype']}{tuple(e['shape'])}")
+
+
+def restore_checkpoint(path: str, like: Any, *,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``.
+
+    Validation: the checkpoint's leaf set must equal ``like``'s exactly
+    (extra or missing paths raise listing them), each array must match
+    its manifest entry (:func:`_validate_manifest`), and each array's
+    shape AND dtype must match the corresponding ``like`` leaf — a dtype
+    drift raises instead of silently casting, since for EF/quantized
+    reducer state a cast would corrupt the carried error feedback.
+
+    Placement per leaf: the matching ``shardings`` override leaf if one
+    is given (a pytree mirroring ``like`` with Sharding-or-None leaves);
+    else device_put onto the ``like`` leaf's sharding when it is
+    mesh-backed (restores shard-space state directly onto the target
+    mesh); else a concrete ``like`` leaf's committed placement; else a
+    plain host-backed jnp array (abstract ``like`` leaves)."""
     arrays = load_checkpoint(path)
+    _validate_manifest(path, arrays)
+
+    like_flat = jax.tree_util.tree_flatten_with_path(like)[0]
+    like_keys = [_path_str(kp) for kp, _ in like_flat]
+    extra = sorted(set(arrays) - set(like_keys))
+    if extra:
+        raise ValueError(
+            f"checkpoint at '{path}' has leaves with no counterpart in "
+            f"`like` (tree path mismatch?): {extra}")
+    missing = sorted(set(like_keys) - set(arrays))
+    if missing:
+        raise KeyError(
+            f"checkpoint at '{path}' missing leaves: {missing}")
+
+    override: Dict[str, Any] = {}
+    if shardings is not None:
+        s_leaves, s_def = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: x is None)
+        l_def = jax.tree_util.tree_structure(like)
+        if s_def != l_def:
+            raise ValueError(
+                "`shardings` must mirror the structure of `like` "
+                f"(got {s_def}, expected {l_def})")
+        override = dict(zip(like_keys, s_leaves))
 
     def restore(kp, leaf):
         key = _path_str(kp)
-        if key not in arrays:
-            raise KeyError(f"checkpoint missing leaf '{key}'")
         arr = arrays[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(
                 f"shape mismatch for '{key}': ckpt {arr.shape} vs "
-                f"expected {leaf.shape}")
-        sharding = getattr(leaf, "sharding", None)
-        if sharding is not None and hasattr(sharding, "mesh"):
-            return jax.device_put(arr.astype(leaf.dtype), sharding)
-        return jax.numpy.asarray(arr, dtype=leaf.dtype)
+                f"expected {tuple(leaf.shape)}")
+        if arr.dtype != np.dtype(leaf.dtype):
+            raise ValueError(
+                f"dtype mismatch for '{key}': ckpt {arr.dtype} vs "
+                f"expected {np.dtype(leaf.dtype)} (restore never casts "
+                f"— fix `like` or re-save the checkpoint)")
+        sh = override.get(key)
+        if sh is not None:
+            return jax.device_put(arr, sh)
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and getattr(sh, "mesh", None) is not None:
+            return jax.device_put(arr, sh)
+        if isinstance(leaf, jax.Array):
+            return jax.device_put(arr, leaf.sharding)
+        return jax.numpy.asarray(arr)
 
     return jax.tree_util.tree_map_with_path(restore, like)

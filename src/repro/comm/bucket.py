@@ -31,6 +31,20 @@ the params first, and every compress re-derives the layout and checks the
 carried state against it, so a layout/state mismatch fails loudly instead
 of silently misaligning residuals.
 
+Shard-aware layouts (``fsdp > 1``): when built with a
+:class:`~repro.parallel.sharding.ShardPlan`, leaves whose trailing dims are
+fsdp-sharded (resolved by the same rules + divisibility logic as
+``safe_pspec``) pack into *per-shard runs* — bucket shape
+``[pods, G, S, F, run]`` with the ``F`` axis carrying the shard coordinate,
+so each host packs only the slice it owns and packing stays collective-free.
+The codec then sees the *merged* view ``[pods, G, S*F, run]`` (shards act as
+extra learners), so top-k/EF selection is per-shard and error-feedback state
+lives in shard space; the grouped mean runs on the *wire* view through
+``core/topology.py``'s explicit reduce-scatter + all-gather lowering instead
+of an all-reduce that would re-materialize every shard.  Runs (sharded and
+flat alike) are padded to a multiple of the learner count so every level's
+reduce-scatter tiles evenly.
+
 :class:`Pipelined` (the default engine when ``HierAvgParams.overlap`` is
 on) runs the same bucket codec on a double-buffered schedule — a
 ``lax.scan`` over uniform buckets that issues stage *i*'s grouped
@@ -47,6 +61,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.reducer import N_LEARNER_AXES, Reducer, serial_reduce
+from repro.parallel.sharding import ShardPlan, _path_str
 
 # Default per-bucket cap (bytes of one learner's slice).  4 MiB keeps a
 # whole fp32 bucket row (~1M elements) inside a TPU core's VMEM budget for
@@ -58,12 +73,18 @@ DEFAULT_BUCKET_BYTES = 4 << 20
 
 @dataclass(frozen=True)
 class BucketSlot:
-    """Where one leaf lives inside its bucket."""
+    """Where one leaf lives inside its bucket.
+
+    In a sharded bucket (``BucketSpec.shards > 1``) ``offset``/``size``
+    are in *per-shard* elements — the run each of the F shard coordinates
+    contributes, ``size = leaf_size / F``.
+    """
 
     leaf: int                  # index into the flattened tree
-    offset: int                # element offset within the bucket
-    size: int                  # per-learner element count
+    offset: int                # element offset within the bucket (run)
+    size: int                  # per-learner (per-shard if sharded) count
     shape: Tuple[int, ...]     # per-learner trailing shape
+    shard_dim: Optional[int] = None   # which trailing dim fsdp shards
 
 
 @dataclass(frozen=True)
@@ -71,10 +92,12 @@ class BucketSpec:
     """One contiguous, single-dtype bucket."""
 
     dtype: str                 # canonical dtype name (hashable)
-    size: int                  # unpadded per-learner element count
-    shape: Tuple[int, ...]     # per-learner bucket shape: (size,) flat, or
-                               # (a, b) zero-padded in matrix mode
+    size: int                  # unpadded run length (per-shard if sharded)
+    shape: Tuple[int, ...]     # per-learner bucket shape: (run,) flat,
+                               # (F, run) sharded, or (a, b) zero-padded
+                               # in matrix mode
     slots: Tuple[BucketSlot, ...]
+    shards: int = 1            # fsdp shard count F (1 == replicated run)
 
     @property
     def padded_size(self) -> int:
@@ -89,6 +112,28 @@ def _matrix_shape(size: int) -> Tuple[int, int]:
     return a, b
 
 
+def _split_shard(x, lead: int, sd: int, F: int):
+    """``[*lead, *trailing]`` -> ``[*lead, F, run]``: expose the fsdp
+    shard coordinate of trailing dim ``sd`` as an explicit F-major axis.
+    GSPMD shards a dim into F contiguous blocks, so the split reshape,
+    the transpose, and the final flatten are all shard-local — no
+    collective is issued by packing."""
+    a = lead + sd
+    d = x.shape[a]
+    y = x.reshape(x.shape[:a] + (F, d // F) + x.shape[a + 1:])
+    y = jnp.moveaxis(y, a, lead)
+    return y.reshape(y.shape[:lead + 1] + (-1,))
+
+
+def _join_shard(y, lead: int, sd: int, shape: Tuple[int, ...], F: int):
+    """Inverse of :func:`_split_shard`: ``[*lead, F, run]`` back to the
+    leaf's per-learner ``shape`` (also shard-local)."""
+    rest = shape[:sd] + (shape[sd] // F,) + shape[sd + 1:]
+    y = y.reshape(y.shape[:lead] + (F,) + rest)
+    y = jnp.moveaxis(y, lead, lead + sd)
+    return y.reshape(y.shape[:lead] + tuple(shape))
+
+
 @dataclass(frozen=True)
 class BucketLayout:
     """Static packing plan for one pytree (shape/dtype) signature.
@@ -101,6 +146,7 @@ class BucketLayout:
     treedef: Any
     lead_axes: int
     buckets: Tuple[BucketSpec, ...]
+    shards: Optional[ShardPlan] = None
 
     # ------------------------------------------------------------------ #
     # construction
@@ -110,7 +156,7 @@ class BucketLayout:
     def build(cls, tree, *, bucket_bytes: int = DEFAULT_BUCKET_BYTES,
               lead_axes: int = N_LEARNER_AXES,
               matrix: bool = False, uniform: bool = False,
-              shard_axes: Optional[Tuple[str, ...]] = None
+              shards: Optional[ShardPlan] = None
               ) -> "BucketLayout":
         """Dtype-grouped, size-capped buckets in leaf order.
 
@@ -118,38 +164,36 @@ class BucketLayout:
         (leaves are never split across buckets); ``bucket_bytes <= 0``
         means one bucket per dtype.
 
-        ``uniform=True`` zero-pads every bucket of a dtype group to the
+        ``uniform=True`` zero-pads every bucket of a group to the
         group's largest bucket, so the buckets form a rectangular
         schedule a ``lax.scan`` can iterate (the pipelined engine's
         requirement); single-bucket groups keep their exact size, so
         uniform and ragged layouts agree whenever there is nothing to
         scan over.
 
-        ``shard_axes`` names mesh axes that shard the leaves' *trailing*
-        (per-learner) dims — e.g. ``("fsdp",)`` under a
-        ``ParallelLayout(fsdp>1)``.  Packing such leaves into one flat
-        bucket would concatenate coordinates owned by different shards
-        and turn the per-bucket grouped collective into a cross-shard
-        gather; shard-aware bucketing (one bucket run per shard) is not
-        implemented yet, so this refuses loudly instead of silently
-        building a layout whose collectives re-materialize every shard.
+        ``shards`` — the :class:`~repro.parallel.sharding.ShardPlan` of
+        an ``fsdp > 1`` ``ParallelLayout`` — makes the layout
+        shard-aware: leaves whose trailing dims the plan shards (resolved
+        per leaf path with the same divisibility fallback as
+        ``safe_pspec``) go to *sharded* buckets with one run per shard
+        (``shape = (F, run)``), packed from each host's own slice; leaves
+        the plan leaves replicated pack flat as before.  All runs are
+        padded to a multiple of the learner count so every level's
+        reduce-scatter + all-gather lowering tiles evenly.  Matrix-mode
+        (low-rank) reducers cannot act on a per-shard run, so matrix +
+        sharded leaves still refuses.
         """
-        if shard_axes:
-            raise NotImplementedError(
-                f"shard-aware bucketing is not implemented: leaves are "
-                f"sharded over mesh axes {tuple(shard_axes)} (an fsdp>1 "
-                f"ParallelLayout), and packing cross-shard leaves into "
-                f"one flat bucket would make each bucket collective "
-                f"re-materialize all shards; run with fsdp=1 or "
-                f"bucket_bytes=0 (per-leaf reductions) until per-shard "
-                f"bucket runs land")
         if matrix and uniform:
             raise ValueError(
                 "uniform (pipelined) layouts are flat-only; matrix-mode "
                 "reducers (PowerSGD) run the serial bucket schedule")
-        leaves, treedef = jax.tree.flatten(tree)
-        per_dtype: Dict[str, List[Tuple[int, Tuple[int, ...], int]]] = {}
-        for i, leaf in enumerate(leaves):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        F = shards.size if shards is not None else 1
+        n_lead = shards.n_lead if shards is not None else 1
+        groups: Dict[Tuple[str, bool],
+                     List[Tuple[int, Tuple[int, ...], int,
+                                Optional[int]]]] = {}
+        for i, (kp, leaf) in enumerate(flat):
             if len(leaf.shape) < lead_axes:
                 raise ValueError(
                     f"leaf {i} has shape {tuple(leaf.shape)} but the layout "
@@ -157,12 +201,26 @@ class BucketLayout:
             shape = tuple(leaf.shape[lead_axes:])
             size = math.prod(shape) if shape else 1
             name = jnp.dtype(leaf.dtype).name
-            per_dtype.setdefault(name, []).append((i, shape, size))
+            sd = None
+            if shards is not None and F > 1:
+                sd = shards.leaf_shard_dim(_path_str(kp), shape)
+            if sd is not None and matrix:
+                raise NotImplementedError(
+                    f"matrix-mode (low-rank) reducers cannot pack "
+                    f"fsdp-sharded leaves: leaf {_path_str(kp)} is sharded "
+                    f"on trailing dim {sd}; use a coordinate-wise reducer "
+                    f"(mean/cast/topk/randk/qint8) under fsdp>1, or run "
+                    f"PowerSGD with fsdp=1")
+            run = size // F if sd is not None else size
+            groups.setdefault((name, sd is not None), []).append(
+                (i, shape, run, sd))
 
         buckets: List[BucketSpec] = []
-        for name, entries in per_dtype.items():   # insertion order (3.7+)
+        for (name, sharded), entries in groups.items():  # insertion order
             itemsize = jnp.dtype(name).itemsize
+            shard_n = F if sharded else 1
             cap = (bucket_bytes // itemsize) if bucket_bytes > 0 else 0
+            cap = max(1, cap // shard_n) if cap else 0  # per-shard units
             slots: List[BucketSlot] = []
             filled = 0
 
@@ -170,25 +228,31 @@ class BucketLayout:
                 nonlocal slots, filled
                 if not slots:
                     return
-                shape = (_matrix_shape(filled) if matrix else (filled,))
+                if matrix:
+                    shape: Tuple[int, ...] = _matrix_shape(filled)
+                else:
+                    run_p = filled if shards is None \
+                        else -(-filled // n_lead) * n_lead
+                    shape = (shard_n, run_p) if sharded else (run_p,)
                 buckets.append(BucketSpec(name, filled, shape,
-                                          tuple(slots)))
+                                          tuple(slots), shard_n))
                 slots, filled = [], 0
 
             group_start = len(buckets)
-            for i, shape, size in entries:
-                if cap and slots and filled + size > cap:
+            for i, shape, run, sd in entries:
+                if cap and slots and filled + run > cap:
                     flush()
-                slots.append(BucketSlot(i, filled, size, shape))
-                filled += size
+                slots.append(BucketSlot(i, filled, run, shape, sd))
+                filled += run
             flush()
             if uniform and len(buckets) - group_start > 1:
                 group = buckets[group_start:]
-                pad_n = max(b.size for b in group)
+                pad_n = max(b.shape[-1] for b in group)
                 buckets[group_start:] = [
-                    BucketSpec(b.dtype, b.size, (pad_n,), b.slots)
+                    BucketSpec(b.dtype, b.size, b.shape[:-1] + (pad_n,),
+                               b.slots, b.shards)
                     for b in group]
-        return cls(treedef, lead_axes, tuple(buckets))
+        return cls(treedef, lead_axes, tuple(buckets), shards)
 
     # ------------------------------------------------------------------ #
     # derived facts
@@ -211,46 +275,132 @@ class BucketLayout:
 
     def describe(self) -> str:
         return (f"{self.n_leaves} leaves -> {self.n_buckets} bucket(s): "
-                + ", ".join(f"{b.dtype}[{b.size}]" for b in self.buckets))
+                + ", ".join(
+                    (f"{b.dtype}[{b.shards}x{b.size}]" if b.shards > 1
+                     else f"{b.dtype}[{b.size}]")
+                    for b in self.buckets))
 
     # ------------------------------------------------------------------ #
     # pack / unpack
     # ------------------------------------------------------------------ #
 
     def pack(self, tree) -> List[jax.Array]:
-        """Pytree -> list of bucket arrays ``[*lead, *bucket.shape]``.
+        """Pytree -> list of bucket arrays ``[*lead, *bucket.shape]`` (the
+        *wire* view: sharded buckets are ``[*lead, F, run]``).
 
         One reshape per leaf (free — layout metadata only) and one concat
-        per bucket; values are never permuted, so elementwise reductions
-        over the lead axes commute with packing bit-for-bit.
+        per bucket; values are never permuted across learners or shards,
+        so elementwise reductions over the lead axes commute with packing
+        bit-for-bit, and for sharded buckets every reshape/transpose is
+        shard-local (see :func:`_split_shard`).
         """
         leaves = self.treedef.flatten_up_to(tree)
         out: List[jax.Array] = []
         for b in self.buckets:
             lead = tuple(leaves[b.slots[0].leaf].shape[:self.lead_axes])
-            parts = [leaves[s.leaf].reshape(lead + (s.size,))
-                     for s in b.slots]
+            nl = len(lead)
+            if b.shards > 1:
+                parts = [_split_shard(leaves[s.leaf], nl, s.shard_dim,
+                                      b.shards) for s in b.slots]
+            else:
+                parts = [leaves[s.leaf].reshape(lead + (s.size,))
+                         for s in b.slots]
             flat = parts[0] if len(parts) == 1 \
                 else jnp.concatenate(parts, axis=-1)
-            if b.shape != (b.size,):
+            if b.shards == 1 and len(b.shape) > 1:   # matrix view
                 pad = b.padded_size - b.size
                 if pad:
-                    flat = jnp.pad(flat, [(0, 0)] * len(lead) + [(0, pad)])
+                    flat = jnp.pad(flat, [(0, 0)] * (flat.ndim - 1)
+                                   + [(0, pad)])
                 flat = flat.reshape(lead + b.shape)
+            else:
+                run_pad = b.shape[-1] - b.size
+                if run_pad:
+                    flat = jnp.pad(flat, [(0, 0)] * (flat.ndim - 1)
+                                   + [(0, run_pad)])
             out.append(flat)
         return out
 
     def unpack(self, buckets) -> Any:
-        """Inverse of :meth:`pack` (padding stripped)."""
+        """Inverse of :meth:`pack` (padding stripped; wire view in)."""
         leaves: List[Any] = [None] * self.n_leaves
         for b, arr in zip(self.buckets, buckets):
             lead = tuple(arr.shape[:arr.ndim - len(b.shape)])
+            nl = len(lead)
+            if b.shards > 1:
+                for s in b.slots:
+                    piece = jax.lax.slice_in_dim(arr, s.offset,
+                                                 s.offset + s.size, axis=-1)
+                    leaves[s.leaf] = _join_shard(piece, nl, s.shard_dim,
+                                                 s.shape, b.shards)
+                continue
             flat = arr.reshape(lead + (b.padded_size,))
             for s in b.slots:
                 piece = jax.lax.slice_in_dim(flat, s.offset,
                                              s.offset + s.size, axis=-1)
                 leaves[s.leaf] = piece.reshape(lead + s.shape)
         return self.treedef.unflatten(leaves)
+
+    # ------------------------------------------------------------------ #
+    # wire view <-> codec view (shard-aware layouts)
+    # ------------------------------------------------------------------ #
+    #
+    # Sharded buckets have two equivalent reshapes:
+    #   wire view  [pods, G, S, F, run] — what pack() emits and what the
+    #       reduce-scatter/all-gather mean consumes (the fsdp axis is a
+    #       batch dim the collectives never touch);
+    #   codec view [pods, G, S*F, run] — what the wrapped reducer sees:
+    #       shards act as extra learner rows, so per-learner codecs
+    #       (top-k selection, EF residuals, qint8 blocks) become
+    #       *per-shard* with zero codec changes, and EF state is carried
+    #       in shard space.
+    # Both reshapes merge/split fully-sharded mesh dims in major-minor
+    # order, so they are shard-local (no data movement).  Flat buckets
+    # pass through unchanged.
+
+    def _to_codec(self, b: BucketSpec, arr):
+        if b.shards == 1:
+            return arr
+        la = self.lead_axes
+        return arr.reshape(arr.shape[:la - 1]
+                           + (arr.shape[la - 1] * b.shards,)
+                           + arr.shape[la + 1:])
+
+    def _to_wire(self, b: BucketSpec, arr):
+        if b.shards == 1:
+            return arr
+        la = self.lead_axes
+        return arr.reshape(arr.shape[:la - 1]
+                           + (arr.shape[la - 1] // b.shards, b.shards)
+                           + arr.shape[la:])
+
+    def codec_view(self, buckets) -> List[jax.Array]:
+        return [self._to_codec(b, a) for b, a in zip(self.buckets, buckets)]
+
+    def wire_view(self, buckets) -> List[jax.Array]:
+        return [self._to_wire(b, a) for b, a in zip(self.buckets, buckets)]
+
+    def bucket_shardings(self):
+        """Per-bucket NamedShardings for the wire view (None entries keep
+        the plain all-reduce mean), or None when the whole layout is
+        replicated (fsdp=1) and the fast path applies unchanged."""
+        if self.shards is None:
+            return None
+        lead = tuple(self.shards.lead)
+        if self.lead_axes != len(lead):
+            return None               # accounting layouts (lead_axes=0)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = self.shards.mesh
+        specs = []
+        for b in self.buckets:
+            if b.shards > 1:
+                specs.append(NamedSharding(
+                    mesh, P(*lead, self.shards.axis, None)))
+            elif len(b.shape) == 1:
+                specs.append(NamedSharding(mesh, P(*lead, None)))
+            else:                     # matrix buckets: plain path
+                specs.append(None)
+        return specs
 
 
 # --------------------------------------------------------------------- #
@@ -285,13 +435,22 @@ class Bucketed(Reducer):
     # later resolution with overlap=False can rebuild them serial.
     pipeline_pin = False
 
-    def __init__(self, inner: Reducer, bucket_bytes: Optional[int] = None):
+    def __init__(self, inner: Reducer, bucket_bytes: Optional[int] = None,
+                 shards: Optional[ShardPlan] = None):
         """``bucket_bytes=None`` means "inherit": the layout uses
         DEFAULT_BUCKET_BYTES until plan resolution (core/plan.py
         apply_bucketing) re-caps the wrapper with the plan's
         ``HierAvgParams.bucket_bytes`` — so an explicit ``:bucketed``
-        spec modifier still honors the config knob."""
+        spec modifier still honors the config knob.
+
+        ``shards`` (a :class:`~repro.parallel.sharding.ShardPlan`, from
+        an ``fsdp > 1`` layout) makes every layout this wrapper builds
+        shard-aware and switches the grouped means to the
+        reduce-scatter/all-gather lowering; None keeps the replicated
+        fast path byte-identical to before."""
         if isinstance(inner, Bucketed):
+            if shards is None:
+                shards = inner.shards
             inner = inner.inner
         if bucket_bytes is not None and bucket_bytes < 0:
             raise ValueError(
@@ -299,6 +458,7 @@ class Bucketed(Reducer):
         self.inner = inner
         self.bucket_bytes = None if bucket_bytes is None \
             else int(bucket_bytes)
+        self.shards = shards
         self.stateful = inner.stateful
         self._layouts: Dict[Any, BucketLayout] = {}
 
@@ -317,14 +477,15 @@ class Bucketed(Reducer):
                    ) -> BucketLayout:
         """The (cached) layout for this tree signature — shapes and dtypes
         are static under jit, so this is trace-time work only."""
-        key = _signature(tree, lead_axes)
+        key = (_signature(tree, lead_axes), self.shards)
         lay = self._layouts.get(key)
         if lay is None:
             lay = BucketLayout.build(
                 tree, bucket_bytes=self.effective_bucket_bytes,
                 lead_axes=lead_axes,
                 matrix=getattr(self.inner, "wants_matrix", False),
-                uniform=self.uniform_layout)
+                uniform=self.uniform_layout,
+                shards=self.shards)
             self._layouts[key] = lay
         return lay
 
@@ -333,7 +494,11 @@ class Bucketed(Reducer):
         if refs is None:
             return
         got = [tuple(r.shape) for r in jax.tree.leaves(refs)]
-        want = [lead + b.shape for b in lay.buckets]
+        # EF state lives in shard space: codec-view shapes, where the F
+        # shard rows merge into the last learner axis
+        want = [lead[:-1] + (lead[-1] * b.shards,) + b.shape[1:]
+                if b.shards > 1 else lead + b.shape
+                for b in lay.buckets]
         if got != want:
             raise ValueError(
                 "bucketed reducer state does not match the bucket layout "
@@ -345,13 +510,15 @@ class Bucketed(Reducer):
 
     def init_state(self, params):
         lay = self.layout_for(params)
-        return self.inner.init_state(lay.pack(params))
+        # codec view: for shard-aware layouts the EF/warm-start state is
+        # per-shard ([pods, G, S*F, run]) — shard space
+        return self.inner.init_state(lay.codec_view(lay.pack(params)))
 
     # -- codec ----------------------------------------------------------- #
 
     def compress(self, tree, state):
         lay = self.layout_for(tree)
-        buckets = lay.pack(tree)
+        buckets = lay.codec_view(lay.pack(tree))
         if self.stateful:
             lead = tuple(jax.tree.leaves(tree)[0].shape[:lay.lead_axes])
             self._check_state(lay, state, lead)
@@ -361,20 +528,53 @@ class Bucketed(Reducer):
         lay = self.layout_for(like)
         # the reconstruction stays in bucket space: the grouped mean that
         # follows (core/topology.py) is elementwise over the lead axes, so
-        # it averages buckets exactly as it would leaves
-        return self.inner.decompress(payload, lay.pack(like), state)
+        # it averages buckets exactly as it would leaves.  Returned in the
+        # WIRE view ([pods, G, S, F, run] for sharded buckets) so the
+        # learner-axis mean — plain or reduce-scatter/all-gather — never
+        # mixes shard coordinates.
+        xhat = self.inner.decompress(payload, lay.codec_view(lay.pack(like)),
+                                     state)
+        return lay.wire_view(xhat)
 
     def finalize(self, avg_tree, orig_tree, state):
         lay = self.layout_for(orig_tree)
-        out, state = self.inner.finalize(avg_tree, lay.pack(orig_tree),
-                                         state)
-        return lay.unpack(out), state
+        out, state = self.inner.finalize(
+            lay.codec_view(avg_tree),
+            lay.codec_view(lay.pack(orig_tree)), state)
+        return lay.unpack(lay.wire_view(out)), state
+
+    # -- the serial schedule --------------------------------------------- #
+
+    def reduce(self, avg_fn, tree, state, constraint_fn=None):
+        """The serial composition, shard-aware: when the layout carries a
+        ShardPlan, the per-bucket grouped mean goes through the explicit
+        reduce-scatter + all-gather lowering (core/topology.py) via the
+        ``bucket_specs`` hook; fsdp=1 layouts run the unchanged serial
+        path."""
+        specs = self.layout_for(tree).bucket_shardings()
+        if specs is not None:
+            inner_avg = avg_fn
+
+            def avg_fn(t, cf=None):            # noqa: F811
+                return inner_avg(t, cf, specs)
+        return serial_reduce(self, avg_fn, tree, state, constraint_fn)
 
     # -- accounting ------------------------------------------------------ #
 
     def payload_bytes(self, tree) -> int:
         lay = self.layout_for(tree, lead_axes=0)
         return self.inner.payload_bytes(lay.bucket_structs())
+
+    def wire_payload_bytes(self, tree) -> int:
+        """Bytes per *device*: sharded buckets move only the 1/F shard
+        slice through their reduce-scatter/all-gather (the ring moves the
+        same total volume as an all-reduce of the slice), so each sharded
+        bucket bills at payload / F."""
+        lay = self.layout_for(tree, lead_axes=0)
+        total = 0
+        for b, struct in zip(lay.buckets, lay.bucket_structs()):
+            total += self.inner.payload_bytes([struct]) // max(1, b.shards)
+        return int(total)
 
     def n_messages(self, tree) -> int:
         """Grouped collectives per reduction: one per bucket, not per
@@ -449,37 +649,56 @@ class Pipelined(Bucketed):
                else [() for _ in range(n)])
         if n < 2 or sts is None:
             # nothing to overlap / unsplittable state: serial schedule
-            return serial_reduce(self, avg_fn, tree, state, constraint_fn)
+            # (Bucketed.reduce — shard-aware when the layout is)
+            return Bucketed.reduce(self, avg_fn, tree, state, constraint_fn)
         if self.stateful:
             lead = tuple(jax.tree.leaves(tree)[0].shape[:lay.lead_axes])
             self._check_state(lay, state, lead)
-        buckets = lay.pack(tree)
+        specs = lay.bucket_shardings()
+        # stages and state run in the codec view (shard space); only the
+        # grouped mean round-trips through the wire view
+        buckets = lay.codec_view(lay.pack(tree))
+
+        def bucket_avg(i):
+            """The grouped-mean half of bucket *i*'s stage, as a
+            single-argument fn of the codec-view reconstruction."""
+            if specs is None:
+                return lambda xhat: avg_fn(xhat, constraint_fn)
+            b = lay.buckets[i]
+
+            def gavg(xhat):
+                wire = lay._to_wire(b, xhat)
+                out = avg_fn([wire], constraint_fn, [specs[i]])[0]
+                return lay._to_codec(b, out)
+            return gavg
 
         outs: List[Any] = [None] * n
         new_sts: List[Any] = list(sts)
-        # scan needs rectangular xs: pipeline each (dtype, shape) run of
-        # the uniform layout; a run of one has no neighbor to overlap
-        groups: Dict[Tuple[str, Tuple[int, ...]], List[int]] = {}
+        # scan needs rectangular xs: pipeline each (dtype, shape, shards)
+        # run of the uniform layout (sharded and flat buckets never mix —
+        # their ranks and specs differ); a run of one has no neighbor to
+        # overlap.  Buckets within a run share shape/shards, hence the
+        # same wire spec, so one traced avg serves the whole scan.
+        groups: Dict[Tuple[str, Tuple[int, ...], int], List[int]] = {}
         for i, b in enumerate(lay.buckets):
-            groups.setdefault((b.dtype, b.shape), []).append(i)
+            groups.setdefault((b.dtype, b.shape, b.shards), []).append(i)
         for idxs in groups.values():
             if len(idxs) == 1:
                 i = idxs[0]
                 xhat, st2 = self._stage(buckets[i], sts[i])
-                outs[i] = avg_fn(xhat, constraint_fn)
+                outs[i] = bucket_avg(i)(xhat)
                 new_sts[i] = st2
             else:
                 self._pipeline(idxs, buckets, sts, outs, new_sts,
-                               avg_fn, constraint_fn)
+                               bucket_avg(idxs[0]))
 
         new_state = (self.inner.join_bucket_states(state, new_sts)
                      if self.stateful else state)
         out_buckets, new_state = self.inner.finalize(outs, buckets,
                                                      new_state)
-        return lay.unpack(out_buckets), new_state
+        return lay.unpack(lay.wire_view(out_buckets)), new_state
 
-    def _pipeline(self, idxs, buckets, sts, outs, new_sts, avg_fn,
-                  constraint_fn):
+    def _pipeline(self, idxs, buckets, sts, outs, new_sts, gavg):
         """Double-buffered scan over one uniform bucket run: iteration
         *j* issues the collective for stage *j-1*'s reconstruction (the
         carry) and then compresses bucket *j* — so the collective never
@@ -496,7 +715,7 @@ class Pipelined(Bucketed):
         def body(carry, x):
             # collective for the carried stage FIRST — it depends only on
             # the carry, so stage j's compress below is free to overlap it
-            out_prev = avg_fn(carry, constraint_fn)
+            out_prev = gavg(carry)
             b, st = x if stateful else (x, ())
             xhat, st2 = self._stage(b, st)
             return xhat, (out_prev, st2)
@@ -504,7 +723,7 @@ class Pipelined(Bucketed):
         xs_all = (xs, st_xs) if stateful else xs
         last, (outs_rest, st_rest) = jax.lax.scan(body, xhat0, xs_all)
         # epilogue: drain the pipeline — the final stage's collective
-        outs[idxs[-1]] = avg_fn(last, constraint_fn)
+        outs[idxs[-1]] = gavg(last)
         for j, i in enumerate(idxs[:-1]):
             outs[i] = jax.tree.map(lambda l, j=j: l[j], outs_rest)
         if stateful:

@@ -129,6 +129,14 @@ class Reducer:
         return int(sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
                        for leaf in jax.tree.leaves(tree)))
 
+    def wire_payload_bytes(self, tree) -> int:
+        """Bytes one *device* puts on the wire per reduction.  Equal to
+        :meth:`payload_bytes` on the replicated (fsdp=1) path; the
+        shard-aware bucket engine (comm/bucket.py) overrides it to bill
+        the reduce-scatter/all-gather lowering, where each device moves
+        only its 1/F shard slice of every sharded bucket."""
+        return self.payload_bytes(tree)
+
     def n_messages(self, tree) -> int:
         """Grouped collectives one reduction dispatches (single-learner
         tree): one per leaf on the per-leaf path; Bucketed overrides with

@@ -15,6 +15,16 @@ The reference/residual pair lives in :class:`EFState` and is threaded
 through ``TrainState.comm_state`` by core/hier_avg.py.  The hot compress
 path (flatten -> abs -> threshold -> gather) dispatches through
 kernels/ops.py::topk_compress (``impl="xla" | "pallas" | "pallas_interpret"``).
+
+Shard-space EF contract (``fsdp > 1``): this module never sees shards.
+The bucket engine (comm/bucket.py) hands codecs the *codec view* — shards
+merged into the local-learner axis, ``[pods, G, S*F, run]`` — so each
+shard row selects its own top-k and carries its own ``ref``/``err``
+exactly as an unsharded learner would.  The EF invariant that makes the
+reduce-scatter + all-gather decomposition sound: a shard's residual is a
+function only of coordinates that shard owns, so EF state lives, updates,
+and checkpoints entirely in shard space (no cross-shard state motion; see
+tests/test_sharded.py for the checkpoint round-trip).
 """
 from __future__ import annotations
 

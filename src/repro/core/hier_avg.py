@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from repro.comm import Reducer, reduce_with
 from repro.configs.base import HierAvgParams
 from repro.core.plan import (PlanLike, ReductionLevel, ReductionPlan,
-                             apply_bucketing, init_comm_state, resolve_plan)
+                             apply_bucketing, apply_shards, init_comm_state,
+                             resolve_plan)
 from repro.core.topology import HierTopology, average_over, stack_like
 from repro.optim import Optimizer
 
@@ -49,7 +50,8 @@ def init_state(topo: HierTopology, init_fn, optimizer: Optimizer, key,
                reducer: Optional[Reducer] = None,
                plan: PlanLike = None,
                bucket_bytes: Optional[int] = None,
-               overlap: Optional[bool] = None) -> TrainState:
+               overlap: Optional[bool] = None,
+               shards: Optional[Any] = None) -> TrainState:
     """All learners start from the same w_1 (paper's initialization).
 
     ``plan`` (or legacy ``reducer``) must match what the round/step
@@ -70,6 +72,11 @@ def init_state(topo: HierTopology, init_fn, optimizer: Optimizer, key,
     explicit ``overlap`` re-chooses the bucket engine (demoting
     auto-pipelined wrappers to the serial schedule and vice versa; each
     wrapper keeps its own cap when ``bucket_bytes`` stays None).
+
+    ``shards`` — the :class:`~repro.parallel.sharding.ShardPlan` the
+    round/step builder was given (fsdp>1 meshes); bucketed reducers then
+    carry error-feedback state in *shard space* (codec view), so it must
+    match or the state shapes are wrong.
     """
     from repro.comm import DEFAULT_BUCKET_BYTES
     params1 = init_fn(key)
@@ -78,20 +85,22 @@ def init_state(topo: HierTopology, init_fn, optimizer: Optimizer, key,
     ov = True if overlap is None else overlap
     if plan is not None:
         if isinstance(plan, ReductionPlan):
-            p = plan if (bucket_bytes is None and overlap is None) \
+            p = apply_shards(plan, shards) \
+                if (bucket_bytes is None and overlap is None) \
                 else apply_bucketing(
-                    plan, 0 if bucket_bytes is None else bucket_bytes, ov)
+                    plan, 0 if bucket_bytes is None else bucket_bytes, ov,
+                    shards=shards)
         else:
             p = apply_bucketing(
                 ReductionPlan.parse(plan),
                 DEFAULT_BUCKET_BYTES if bucket_bytes is None
-                else bucket_bytes, ov)
+                else bucket_bytes, ov, shards=shards)
         comm_state = init_comm_state(p, params)
     elif reducer is not None:
         comm_state = init_comm_state(
             apply_bucketing(ReductionPlan.from_k1_k2(1, 1, reducer),
                             DEFAULT_BUCKET_BYTES if bucket_bytes is None
-                            else bucket_bytes, ov), params)
+                            else bucket_bytes, ov, shards=shards), params)
     else:
         comm_state = ()
     return TrainState(params, opt_state, jnp.zeros((), jnp.int32),
@@ -173,8 +182,8 @@ def _make_reduce(constraint_fn, sync_opt_state):
     that level, touching only that level's comm_state entry."""
 
     def reduce(level: ReductionLevel, state: TrainState) -> TrainState:
-        avg_fn = lambda tree, cf=None: average_over(  # noqa: E731
-            tree, level.axes, cf)
+        avg_fn = lambda tree, cf=None, specs=None: average_over(  # noqa: E731
+            tree, level.axes, cf, specs)
         if level.reducer.stateful:
             params, lvl_cs = reduce_with(
                 level.reducer, avg_fn, state.params,
@@ -201,7 +210,8 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
                     grad_postprocess: Optional[Callable] = None,
                     microbatch: int = 1,
                     reducer: Optional[Any] = None,
-                    plan: PlanLike = None):
+                    plan: PlanLike = None,
+                    shards: Optional[Any] = None):
     """Build the jitted Hier-AVG round for an N-level reduction plan.
 
     round(state, round_batch) -> (state, metrics); round_batch leaves are
@@ -222,10 +232,14 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
     reducer of EVERY level.  Per-level reducers come from the plan spec.
     Stateful reducers carry ``TrainState.comm_state`` keyed by level name —
     build the initial state with ``init_state(..., plan=...)``.
+
+    ``shards`` (parallel/sharding.py ShardPlan): fsdp>1 meshes pack
+    buckets shard-locally and lower each level's mean to
+    reduce-scatter + all-gather; pass the same plan to ``init_state``.
     """
     sgd_step = make_sgd_step(loss_fn, optimizer, grad_postprocess,
                              microbatch=microbatch)
-    p = resolve_plan(hier, reducer, plan)
+    p = resolve_plan(hier, reducer, plan, shards=shards)
     _reduce = _make_reduce(constraint_fn, sync_opt_state)
 
     def make_phase(inner, level: ReductionLevel, skipped: bool):
@@ -261,7 +275,8 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
                    skip_local: bool = False,
                    constraint_fn: Optional[Callable] = None,
                    reducer: Optional[Any] = None,
-                   plan: PlanLike = None):
+                   plan: PlanLike = None,
+                   shards: Optional[Any] = None):
     """Single-step variant: per-level counter masking on the step counter.
 
     Level i fires when ``t % period_i == 0`` and the next level does NOT
@@ -282,7 +297,7 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
     trajectories differ by the compression of an already-averaged delta.
     """
     sgd_step = make_sgd_step(loss_fn, optimizer)
-    p = resolve_plan(hier, reducer, plan)
+    p = resolve_plan(hier, reducer, plan, shards=shards)
     last = len(p.levels) - 1
 
     def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
@@ -296,8 +311,8 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
             if i < last:
                 fire = jnp.logical_and(
                     fire, (t % p.levels[i + 1].period) != 0)
-            avg_fn = (lambda lv: lambda tree, cf=None: average_over(
-                tree, lv.axes, cf))(level)
+            avg_fn = (lambda lv: lambda tree, cf=None, specs=None:
+                      average_over(tree, lv.axes, cf, specs))(level)
             lvl_cs = cs[level.name] if level.reducer.stateful else ()
 
             def reduce_branch(operand, level=level, avg_fn=avg_fn):

@@ -217,7 +217,7 @@ class ReductionPlan:
 
 
 def apply_bucketing(plan: ReductionPlan, bucket_bytes: int,
-                    overlap: bool = True) -> ReductionPlan:
+                    overlap: bool = True, shards=None) -> ReductionPlan:
     """Wrap each level's reducer in a bucket engine (comm/bucket.py) so
     it compresses and all-reduces size-capped flat buckets instead of
     raw leaves — :class:`~repro.comm.Pipelined` (the double-buffered
@@ -240,6 +240,12 @@ def apply_bucketing(plan: ReductionPlan, bucket_bytes: int,
     ``overlap=True``.  (Pipelined layouts with a single bucket fall back
     to the serial schedule at trace time — same math, nothing to
     overlap — so the default path is unchanged for small models.)
+
+    ``shards`` (a :class:`~repro.parallel.sharding.ShardPlan` from an
+    ``fsdp > 1`` layout, or None) is threaded into every bucket engine so
+    layouts pack per-shard runs and the grouped means lower to
+    reduce-scatter + all-gather; wrappers already carrying a different
+    ShardPlan are rebuilt.
     """
     levels, changed = [], False
     for lvl in plan.levels:
@@ -260,16 +266,19 @@ def apply_bucketing(plan: ReductionPlan, bucket_bytes: int,
             if (cap is None and bucket_bytes and bucket_bytes > 0
                     and bucket_bytes != r.effective_bucket_bytes):
                 cap = bucket_bytes
-            if type(r) is not engine or cap != r.bucket_bytes:
-                new = engine(r.inner, cap)
+            want_shards = shards if shards is not None else r.shards
+            if (type(r) is not engine or cap != r.bucket_bytes
+                    or want_shards is not r.shards):
+                new = engine(r.inner, cap, shards=want_shards)
                 new.overlap_opt_out = r.overlap_opt_out
                 new.pipeline_pin = getattr(r, "pipeline_pin", False)
         elif (bucket_bytes and bucket_bytes > 0
                 and r.bucket_by_default and not r.bucket_opt_out):
             engine = Pipelined if (overlap and not r.overlap_opt_out) \
                 else Bucketed
-            new = engine(r, bucket_bytes)   # a ':serial' pin stays
-            # visible via new.inner.overlap_opt_out (describe round-trip)
+            new = engine(r, bucket_bytes, shards=shards)  # ':serial' pin
+            # stays visible via new.inner.overlap_opt_out (describe
+            # round-trip)
         if new is not r:
             lvl = replace(lvl, reducer=new)
             changed = True
@@ -277,7 +286,29 @@ def apply_bucketing(plan: ReductionPlan, bucket_bytes: int,
     return ReductionPlan(tuple(levels)) if changed else plan
 
 
-def resolve_plan(hier, reducer=None, plan: PlanLike = None) -> ReductionPlan:
+def apply_shards(plan: ReductionPlan, shards) -> ReductionPlan:
+    """Thread a :class:`~repro.parallel.sharding.ShardPlan` into an
+    already-resolved plan's bucket engines, keeping each level's engine
+    choice and cap — for callers that hold a ``ReductionPlan`` instance
+    (init_state / make_hier_round with ``plan=...``) and only need the
+    fsdp layout attached.  ``shards=None`` is a no-op."""
+    if shards is None:
+        return plan
+    levels, changed = [], False
+    for lvl in plan.levels:
+        r = lvl.reducer
+        if isinstance(r, Bucketed) and r.shards is not shards:
+            new = type(r)(r.inner, r.bucket_bytes, shards=shards)
+            new.overlap_opt_out = r.overlap_opt_out
+            new.pipeline_pin = getattr(r, "pipeline_pin", False)
+            lvl = replace(lvl, reducer=new)
+            changed = True
+        levels.append(lvl)
+    return ReductionPlan(tuple(levels)) if changed else plan
+
+
+def resolve_plan(hier, reducer=None, plan: PlanLike = None,
+                 shards=None) -> ReductionPlan:
     """The plan a round/step builder actually uses.
 
     Precedence: explicit ``plan`` argument (instance or spec string), then
@@ -302,7 +333,7 @@ def resolve_plan(hier, reducer=None, plan: PlanLike = None) -> ReductionPlan:
         p = p.with_reducer(reducer)
     return apply_bucketing(
         p, getattr(hier, "bucket_bytes", DEFAULT_BUCKET_BYTES),
-        getattr(hier, "overlap", True))
+        getattr(hier, "overlap", True), shards=shards)
 
 
 def init_comm_state(plan: ReductionPlan, params):

@@ -194,6 +194,12 @@ class LevelCost:
     seconds_per_round: float
     messages: int = 1        # grouped collectives dispatched per reduction
                              # (per-leaf: n_leaves; bucketed: n_buckets)
+    wire_bytes: int = 0      # per-DEVICE wire bytes: == payload_bytes on
+                             # the replicated path; fsdp-sharded buckets
+                             # are billed at payload/F because the
+                             # reduce-scatter/all-gather lowering moves
+                             # only each device's shard slice (0 means
+                             # "same as payload_bytes")
     compute_s: float = 0.0   # codec compute per round (compress+rebuild)
     overlap_s: float = 0.0   # wall seconds per round incl compute on the
                              # level's actual schedule: pipelined levels
@@ -247,13 +253,16 @@ def level_reduction_seconds(lvl, topo, template,
     n = 1
     for a in lvl.axes:
         n *= topo.shape[a]
-    payload = lvl.reducer.payload_bytes(template)
+    wire = lvl.reducer.wire_payload_bytes(template)
     messages = lvl.reducer.n_messages(template)
     bw = cm.bw_for_level(lvl.axes, topo.pods)
     dense_bytes = int(sum(
         leaf.size * jnp.dtype(leaf.dtype).itemsize
         for leaf in jax.tree.leaves(template)))
-    comm_s = cm.allreduce_time(payload, n, bw) \
+    # the RS+AG decomposition of a sharded bucket walks the same
+    # 2(n-1)-step ring as the fused all-reduce, so the ring formula
+    # applies verbatim with the per-device wire bytes
+    comm_s = cm.allreduce_time(wire, n, bw) \
         + (messages - 1) * 2 * (n - 1) * cm.latency
     stage_compute = (dense_bytes / messages / cm.compress_bw
                      if getattr(lvl.reducer, "has_codec", True) else 0.0)
@@ -321,14 +330,16 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
         for a in lvl.axes:
             n *= topo.shape[a]
         payload = lvl.reducer.payload_bytes(template)
+        wire = lvl.reducer.wire_payload_bytes(template)
         messages = lvl.reducer.n_messages(template)
         bw = cm.bw_for_level(lvl.axes, topo.pods)
         count = counts[lvl.name]
         comm_s, compute_s, wall_s = level_reduction_seconds(
             lvl, topo, template, cm)
         out.append(LevelCost(lvl.name, n, lvl.period, payload, count, bw,
-                             count * comm_s, messages, count * compute_s,
-                             count * wall_s))
+                             count * comm_s, messages, wire_bytes=wire,
+                             compute_s=count * compute_s,
+                             overlap_s=count * wall_s))
     return tuple(out)
 
 

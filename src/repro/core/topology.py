@@ -91,16 +91,92 @@ def unstack_first(tree):
     return jax.tree.map(lambda x: x[0, 0, 0], tree)
 
 
-def average_over(tree, axes: Tuple[int, ...], constraint_fn=None):
+def _scatter_mean(x, sharding, axes: Tuple[int, ...]):
+    """The grouped learner-axis mean of one bucket, lowered explicitly to
+    reduce-scatter + all-gather instead of a full all-reduce.
+
+    ``x`` is a packed bucket ``[pods, G, S, run]`` (or ``[pods, G, S, F,
+    run]`` for fsdp-sharded buckets) whose placement is ``sharding`` — one
+    mesh axis per lead dim, payload dim(s) trailing.  The chain matches
+    GSPMD's decomposition of the multi-axis mean (one collective per mesh
+    axis, minor axis first) so the summation order — and therefore every
+    bit of the result — is identical to the all-reduce lowering; the run
+    length must tile over the reduced axes (BucketLayout pads for this).
+    Returns None when the mesh/spec cannot take the scatter path (caller
+    falls back to the plain mean)."""
+    from jax.experimental.shard_map import shard_map
+
+    mesh = sharding.mesh
+    spec = tuple(sharding.spec) + (None,) * (x.ndim - len(sharding.spec))
+    names = []
+    for a in axes:
+        ax = spec[a] if a < len(spec) else None
+        if ax is None or isinstance(ax, tuple):
+            return None                      # lead dim not mesh-mapped
+        if x.shape[a] != int(mesh.shape.get(ax, 1)):
+            return None                      # dim not fully sharded
+        names.append(ax)
+    active = [a for a in names if int(mesh.shape.get(a, 1)) > 1]
+    n = 1
+    for a in names:
+        n *= int(mesh.shape.get(a, 1))
+    if not active:                           # single-learner grid: local mean
+        return None
+    run = x.shape[-1]
+    tile = 1
+    for a in active:
+        tile *= int(mesh.shape[a])
+    if run % tile:
+        return None                          # un-padded run: cannot tile
+
+    def blk(xb):
+        d = xb.ndim - 1
+        s = xb
+        for a in reversed(active):           # minor axis first, like GSPMD
+            s = jax.lax.psum_scatter(s, a, scatter_dimension=d, tiled=True)
+        m = s / n
+        for a in active:
+            m = jax.lax.all_gather(m, a, axis=d, tiled=True)
+        return m
+
+    pspec = jax.sharding.PartitionSpec(*spec)
+    return shard_map(blk, mesh=mesh, in_specs=pspec, out_specs=pspec,
+                     check_rep=False)(x)
+
+
+def average_over(tree, axes: Tuple[int, ...], constraint_fn=None,
+                 bucket_specs=None):
     """Mean over stacked learner axes, broadcast back (== grouped all-reduce).
 
     ``constraint_fn(leaf) -> leaf`` optionally re-pins the sharding after the
     broadcast (used by the distributed launcher to keep GSPMD honest).
+
+    ``bucket_specs`` — a leaf-aligned sequence of NamedShardings (or None
+    per leaf), supplied by the shard-aware bucket engine (comm/bucket.py)
+    for fsdp>1 layouts — switches matching leaves to the explicit
+    reduce-scatter + all-gather lowering: each device contributes and
+    receives only its shard slice, instead of the all-reduce
+    re-materializing every shard.  Bit-identical to the plain path (same
+    per-axis summation order); leaves whose spec is None (or cannot tile)
+    keep the plain mean.  The specs pin the output placement, so
+    ``constraint_fn`` is not applied on this path — the launcher's
+    constraint targets param-shaped trees, not packed buckets.
     """
     def avg(x):
         m = jnp.mean(x, axis=axes, keepdims=True)
         y = jnp.broadcast_to(m, x.shape)
         return y
+
+    if bucket_specs is not None:
+        leaves, treedef = jax.tree.flatten(tree)
+        specs = list(bucket_specs)
+        assert len(specs) == len(leaves), \
+            f"{len(specs)} bucket specs for {len(leaves)} bucket leaves"
+        out = []
+        for x, s in zip(leaves, specs):
+            y = _scatter_mean(x, s, axes) if s is not None else None
+            out.append(avg(x) if y is None else y)
+        return treedef.unflatten(out)
 
     out = jax.tree.map(avg, tree)
     if constraint_fn is not None:
@@ -108,17 +184,17 @@ def average_over(tree, axes: Tuple[int, ...], constraint_fn=None):
     return out
 
 
-def local_average(tree, constraint_fn=None):
+def local_average(tree, constraint_fn=None, bucket_specs=None):
     """The paper's local reduction: mean within each cluster of S learners."""
-    return average_over(tree, LOCAL_ARRAY_AXES, constraint_fn)
+    return average_over(tree, LOCAL_ARRAY_AXES, constraint_fn, bucket_specs)
 
 
-def global_average(tree, constraint_fn=None):
+def global_average(tree, constraint_fn=None, bucket_specs=None):
     """The paper's global reduction: mean over all P learners."""
-    return average_over(tree, GLOBAL_ARRAY_AXES, constraint_fn)
+    return average_over(tree, GLOBAL_ARRAY_AXES, constraint_fn, bucket_specs)
 
 
-def pod_average(tree, constraint_fn=None):
+def pod_average(tree, constraint_fn=None, bucket_specs=None):
     """Beyond-paper: intra-pod reduction (axes group+local, not pod) —
     a middle hierarchy level matching the ICI/DCI boundary."""
-    return average_over(tree, POD_ARRAY_AXES, constraint_fn)
+    return average_over(tree, POD_ARRAY_AXES, constraint_fn, bucket_specs)

@@ -23,7 +23,8 @@ from repro.launch.mesh import PODS_MULTI, make_hier_mesh, make_production_mesh
 from repro.models import build
 from repro.models.stubs import train_batch_specs
 from repro.optim import sgd
-from repro.parallel.sharding import PartitionRules, param_pspecs, safe_pspec
+from repro.parallel.sharding import (PartitionRules, param_pspecs,
+                                     safe_pspec, shard_plan)
 
 
 @dataclasses.dataclass
@@ -73,12 +74,16 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
 
     bundle = build(cfg, param_dtype=param_dtype, remat=remat)
     optimizer = sgd(0.1)          # paper: plain SGD, step-decayed lr
+    rules = PartitionRules()
+    # fsdp>1: shard-aware bucket layout — buckets pack each device's
+    # shard slice and every level's mean lowers to RS+AG (comm/bucket.py)
+    shards = shard_plan(mesh, rules=rules) if lay.fsdp > 1 else None
 
     # ---- state structure without allocation ----
     state_struct = jax.eval_shape(
-        lambda k: init_state(topo, bundle.init, optimizer, k, plan=plan),
+        lambda k: init_state(topo, bundle.init, optimizer, k, plan=plan,
+                             shards=shards),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
-    rules = PartitionRules()
     pspecs = param_pspecs(state_struct.params, mesh, stacked_learners=True,
                           rules=rules)
     opt_specs = jax.tree.map(
@@ -102,15 +107,29 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
     # axes only (its trailing [b, rank] dims are tiny)
     params_treedef = jax.tree_util.tree_structure(state_struct.params)
 
+    s_sz = int(mesh.shape["local"])
+    f_sz = int(mesh.shape.get("fsdp", 1))
+
+    def bucket_lead_spec(leaf) -> P:
+        """Lead spec for bucket-space leaves: learner axes sharded,
+        trailing dims replicated.  Under an fsdp>1 ShardPlan the bucket
+        engine keeps EF state in the *codec view* — shards merged into
+        the local-learner dim, [pods, G, S*F, run] — so dim 2 shards
+        over the ("local", "fsdp") tuple (major-minor mesh order, the
+        shard-local merge comm/bucket.py performs)."""
+        lead = ("pod", "group", "local")
+        if (shards is not None and leaf.ndim >= 3
+                and leaf.shape[2] == s_sz * f_sz):
+            lead = ("pod", "group", ("local", "fsdp"))
+        return safe_pspec(P(*(lead + (None,) * (leaf.ndim - 3))),
+                          leaf.shape, mesh)
+
     def stacked_specs(tree):
         """Learner axes sharded, trailing dims replicated — the fallback
         for state trees that do NOT mirror the params (bucket-space EF
-        from comm/bucket.py: [pods, G, S, n] packed buckets)."""
-        return jax.tree.map(
-            lambda leaf: safe_pspec(
-                P(*(("pod", "group", "local")
-                    + (None,) * (leaf.ndim - 3))), leaf.shape, mesh),
-            tree)
+        from comm/bucket.py: [pods, G, S, n] packed buckets, or
+        [pods, G, S*F, n] codec-view buckets under fsdp sharding)."""
+        return jax.tree.map(bucket_lead_spec, tree)
 
     def level_comm_specs(cs):
         if isinstance(cs, EFState):
@@ -165,14 +184,12 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
         def pin_learner_axes(leaf):
             """Generic re-pin for trees that do NOT mirror the params
             (bucket-space reductions, comm/bucket.py): learner axes
-            sharded, trailing bucket dims replicated."""
+            sharded, trailing bucket dims replicated (codec-view leaves
+            keep their fsdp shard via ``bucket_lead_spec``)."""
             if getattr(leaf, "ndim", 0) < 3:
                 return leaf
-            spec = safe_pspec(
-                P(*(("pod", "group", "local")
-                    + (None,) * (leaf.ndim - 3))), leaf.shape, mesh)
             return jax.lax.with_sharding_constraint(
-                leaf, NamedSharding(mesh, spec))
+                leaf, NamedSharding(mesh, bucket_lead_spec(leaf)))
 
         def constraint_fn(tree):
             try:
@@ -188,7 +205,8 @@ def train_case(cfg: ArchConfig, shape: InputShape, *, multi_pod: bool,
     round_fn = make_hier_round(bundle.loss_fn, optimizer, hier,
                                sync_opt_state=sync_opt_state,
                                constraint_fn=constraint_fn,
-                               microbatch=lay.microbatch)
+                               microbatch=lay.microbatch,
+                               shards=shards)
 
     jitted = jax.jit(round_fn,
                      in_shardings=(state_shardings, batch_shardings),

@@ -41,3 +41,22 @@ def make_hier_mesh(layout: ParallelLayout, *, multi_pod: bool = False):
 
 def device_count_required(*, multi_pod: bool = False) -> int:
     return (PODS_MULTI if multi_pod else 1) * DATA_AXIS * TP_AXIS
+
+
+# learner array axis index (core/topology.py) -> hier mesh axis name
+LEARNER_MESH_AXES = ("pod", "group", "local")
+
+
+def level_replica_groups(mesh, level: str):
+    """Device-id groups of the grouped collective one plan level runs on
+    a hier mesh: the reduction spans the level's learner mesh axes and
+    *keeps* the fsdp/model axes — so each fsdp shard (and each TP slice)
+    averages only with its peers, which is exactly the grouping the
+    reduce-scatter/all-gather decomposition (core/topology.py
+    ``_scatter_mean``) reduces over.  Built from the row-major device
+    order of ``mesh.devices`` (parallel/sharding.py
+    :func:`~repro.parallel.sharding.replica_groups`)."""
+    from repro.core.plan import LEVEL_AXES
+    from repro.parallel.sharding import replica_groups
+    axes = tuple(LEARNER_MESH_AXES[a] for a in LEVEL_AXES[level])
+    return replica_groups(mesh, axes)

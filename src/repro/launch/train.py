@@ -57,6 +57,14 @@ def main() -> None:
                     help="pin the serial bucket schedule (default: the "
                          "pipelined engine overlaps each bucket's grouped "
                          "collective with the next bucket's compress)")
+    ap.add_argument("--fsdp", type=int, default=1,
+                    help="shard the per-learner trailing dims F ways "
+                         "(parallel/sharding.py ShardPlan): bucketed "
+                         "reductions pack shard-local runs and lower "
+                         "each level's mean to reduce-scatter + "
+                         "all-gather.  Needs learners*fsdp devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N on CPU)")
     ap.add_argument("--autotune", default=None, metavar="CALIB_JSON",
                     help="calibration artifact (autotune/calibrate.py); "
                          "runs the cost-aware plan search over the real "
@@ -76,6 +84,23 @@ def main() -> None:
                          plan=args.plan, bucket_bytes=args.bucket_bytes,
                          overlap=not args.no_overlap)
     bundle = build(cfg)
+    shards = None
+    if args.fsdp > 1:
+        import numpy as np
+        from jax.sharding import Mesh
+
+        from repro.parallel.sharding import shard_plan
+        need = topo.n_learners * args.fsdp
+        devs = jax.devices()
+        assert len(devs) >= need, (
+            f"--fsdp {args.fsdp} needs {need} devices, have {len(devs)} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} on CPU)")
+        mesh = Mesh(
+            np.array(devs[:need]).reshape(
+                1, topo.groups, topo.local, args.fsdp, 1),
+            ("pod", "group", "local", "fsdp", "model"))
+        shards = shard_plan(mesh)
     if args.autotune:
         from repro.autotune import Calibration, search_plans
         cal = Calibration.load(args.autotune)
@@ -105,9 +130,11 @@ def main() -> None:
                             per_learner_batch=args.batch, seed=args.seed)
     # donate the carried TrainState (params/opt_state/EF update in place —
     # no doubled peak memory); the loop only ever uses the returned state
-    round_fn = jax.jit(make_hier_round(bundle.loss_fn, optimizer, hier),
+    round_fn = jax.jit(make_hier_round(bundle.loss_fn, optimizer, hier,
+                                       shards=shards),
                        donate_argnums=(0,))
-    state = init_state(topo, bundle.init, optimizer, key, plan=plan)
+    state = init_state(topo, bundle.init, optimizer, key, plan=plan,
+                       shards=shards)
 
     print(f"Hier-AVG: {topo.describe()}  plan={plan.describe()} "
           f"arch={cfg.name}")

@@ -1,3 +1,5 @@
 from repro.parallel.sharding import (PartitionRules,  # noqa: F401
+                                     PSpecDropWarning, ShardPlan,
                                      batch_pspec, make_constraint_fn,
-                                     param_pspecs, safe_pspec)
+                                     param_pspecs, replica_groups,
+                                     resolve_pspec, safe_pspec, shard_plan)

@@ -16,14 +16,28 @@ remaining extras None.
 
 ``safe_pspec`` drops any axis whose mesh size does not divide the array dim
 (e.g. hymba's 25 attention heads vs TP-16, seamless' 256206 vocab), keeping
-every config lowerable without special cases.
+every config lowerable without special cases.  The drop is *surfaced*: it
+warns (:class:`PSpecDropWarning`) and ``resolve_pspec`` exposes the dropped
+set, so the shard-aware bucket layout (comm/bucket.py) and the cost model
+(core/theory.py) agree on which leaves are actually sharded instead of
+double-billing a silently replicated fallback.
+
+:class:`ShardPlan` is the handle the reduction stack carries for an
+``fsdp > 1`` layout: which mesh axis shards the per-learner trailing dims,
+which leaf dim it lands on (via the same rules + divisibility resolution as
+``safe_pspec``), and the mesh itself — so bucket layouts, scatter-mean
+collectives, and theory billing all resolve sharding identically.
 """
 from __future__ import annotations
 
+import math
 import re
+import warnings
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # ordered (regex, inner spec relative to the *logical* trailing dims)
@@ -127,10 +141,21 @@ class PartitionRules:
         return P(*axes)
 
 
-def safe_pspec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
-    """Drop axis names whose mesh size does not divide the array dim."""
-    out = []
-    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+class PSpecDropWarning(UserWarning):
+    """A requested partition axis was dropped (non-dividing dim): the leaf
+    stays replicated over that mesh axis.  Layout and billing must use the
+    *resolved* spec — see ``resolve_pspec``."""
+
+
+def resolve_pspec(spec: P, shape: Tuple[int, ...], mesh: Mesh
+                  ) -> Tuple[P, Tuple[Tuple[int, object], ...]]:
+    """Resolve ``spec`` against ``shape``/``mesh``: drop axis names whose
+    mesh size does not divide the array dim, and *return the drops* as
+    ``(dim_index, axis_name)`` pairs so callers can bill / warn from the
+    resolved layout instead of the requested one."""
+    out, dropped = [], []
+    for d, (dim, ax) in enumerate(
+            zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec)))):
         if ax is None:
             out.append(None)
             continue
@@ -138,8 +163,114 @@ def safe_pspec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
         size = 1
         for n in names:
             size *= mesh.shape[n]
-        out.append(ax if dim % size == 0 else None)
-    return P(*out)
+        if dim % size == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+            dropped.append((d, ax))
+    return P(*out), tuple(dropped)
+
+
+def safe_pspec(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+               *, warn: bool = True) -> P:
+    """Drop axis names whose mesh size does not divide the array dim.
+
+    Dropping means the leaf silently stays *replicated* over that mesh
+    axis — which matters to anything that assumes the spec it asked for
+    (memory budgets, shard-aware bucket layouts, comm billing) — so the
+    drop warns by default; pass ``warn=False`` where the replicated
+    fallback is expected, or use ``resolve_pspec`` to inspect the drops.
+    """
+    out, dropped = resolve_pspec(spec, shape, mesh)
+    if warn and dropped:
+        warnings.warn(
+            f"safe_pspec: dropping non-dividing axes {list(dropped)} of "
+            f"spec {spec} for shape {tuple(shape)} — those dims stay "
+            f"replicated; layouts/billing must use the resolved spec "
+            f"{out}", PSpecDropWarning, stacklevel=2)
+    return out
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """How an ``fsdp > 1`` ``ParallelLayout`` shards the per-learner
+    trailing dims — the single handle the whole reduction stack keys off:
+
+      * ``comm/bucket.py`` packs a per-shard run per bucket from
+        ``leaf_shard_dim`` (the same rules + divisibility resolution as
+        ``safe_pspec``, so layout and actual placement cannot disagree),
+      * ``core/topology.py`` lowers the per-bucket grouped mean to
+        reduce-scatter + all-gather over ``mesh``,
+      * ``core/theory.py`` bills shard-local wire payloads (1/``size``).
+
+    Hashable (the jax Mesh is); ``rules`` is excluded from eq/hash — two
+    plans over the same mesh/axis resolve identically for the default
+    rules, and layout caches key off identity-relevant fields only.
+    """
+
+    mesh: Mesh
+    axis: str = "fsdp"
+    lead: Tuple[str, ...] = ("pod", "group", "local")
+    rules: Optional[PartitionRules] = field(default=None, compare=False,
+                                            hash=False)
+
+    @property
+    def size(self) -> int:
+        """Shards per learner (the fsdp mesh-axis size)."""
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def n_lead(self) -> int:
+        """Total learner count on the mesh — bucket runs are padded to a
+        multiple of this so every level's reduce-scatter tiles evenly."""
+        n = 1
+        for a in self.lead:
+            n *= int(self.mesh.shape.get(a, 1))
+        return n
+
+    def leaf_shard_dim(self, path: str, shape: Tuple[int, ...]
+                       ) -> Optional[int]:
+        """Which *trailing* (per-learner) dim of the leaf at ``path`` the
+        shard axis lands on, or None when the leaf stays replicated
+        (rules put the axis nowhere, or it does not divide — exactly the
+        ``safe_pspec``/``resolve_pspec`` drop)."""
+        if self.size <= 1:
+            return None
+        rules = self.rules or PartitionRules()
+        spec = rules.spec_for(path, shape, stacked_learners=False)
+        resolved, _ = resolve_pspec(spec, shape, self.mesh)
+        for d, ax in enumerate(tuple(resolved)):
+            if ax == self.axis:
+                return d
+        return None
+
+
+def shard_plan(mesh: Mesh, *, axis: str = "fsdp",
+               lead: Tuple[str, ...] = ("pod", "group", "local"),
+               rules: Optional[PartitionRules] = None
+               ) -> Optional[ShardPlan]:
+    """ShardPlan for ``mesh``, or None when the shard axis is absent or
+    trivial (``fsdp=1`` layouts run the replicated fast path)."""
+    if axis not in mesh.shape or mesh.shape[axis] <= 1:
+        return None
+    return ShardPlan(mesh=mesh, axis=axis, lead=lead, rules=rules)
+
+
+def replica_groups(mesh: Mesh, reduce_axes: Sequence[str]
+                   ) -> List[List[int]]:
+    """Device-id groups of the grouped collective that reduces over
+    ``reduce_axes``: one group per coordinate of the *kept* axes (the
+    pxla ShardingSpec recipe — row-major device order, reduced axes
+    minor).  E.g. a global reduction on a (pod, group, local, fsdp) mesh
+    keeps fsdp, so each fsdp shard averages only with its peers."""
+    shape = mesh.devices.shape
+    ids = np.arange(math.prod(shape)).reshape(shape)
+    names = mesh.axis_names
+    red = [i for i, n in enumerate(names) if n in tuple(reduce_axes)]
+    keep = [i for i in range(len(names)) if i not in red]
+    group_n = math.prod(shape[i] for i in red) if red else 1
+    grouped = ids.transpose(keep + red).reshape(-1, group_n)
+    return [[int(d) for d in row] for row in grouped]
 
 
 def param_pspecs(params, mesh: Mesh, *, stacked_learners: bool,
