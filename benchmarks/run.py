@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_compression -> reducer sweep: payload bytes vs converged accuracy
   bench_bucketing   -> per-leaf vs bucketed reduction A/B (comm/bucket.py)
   bench_autotune    -> probe -> calibrate -> recommend pipeline (autotune/)
+  bench_serving     -> paged continuous batching vs dense wave serving A/B
+                       + flash-decode kernel vs oracle (serve/, kernels/)
   roofline          -> §Roofline rows from the dry-run artifacts (if present)
 
 ``bench_bucketing`` additionally writes machine-readable
@@ -26,7 +28,12 @@ it as an artifact and fails if the A/B rows go missing.  Likewise
 record with fitted CommModel constants + round-trip fit error, the
 ``recommended/*`` plan-search records, and the ``controller/*`` adapted
 periods); CI runs its probe+calibrate smoke and fails if the calibration
-or recommended-plan records go missing.
+or recommended-plan records go missing.  ``bench_serving`` writes
+``BENCH_serving.json`` (per-slot-count dense/paged rows with
+tokens_per_s, p99_ms, wasted_ratio, decode_steps and speedup_vs_dense on
+the paged rows, plus the flashdecode oracle/kernel pair); CI runs its
+2-round smoke and fails if the paged+dense or flashdecode rows go
+missing.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig1] [--smoke]
 """
@@ -64,7 +71,8 @@ def main() -> None:
     from benchmarks import (bench_adaptive_k2, bench_autotune,
                             bench_bucketing, bench_comm, bench_compression,
                             bench_k1_s, bench_k2, bench_large_proxy,
-                            bench_layouts, bench_vs_kavg, roofline)
+                            bench_layouts, bench_serving, bench_vs_kavg,
+                            roofline)
     suites = [
         ("bench_k2", bench_k2.run),
         ("bench_k1_s", bench_k1_s.run),
@@ -78,6 +86,8 @@ def main() -> None:
          lambda: bench_bucketing.run(smoke=args.smoke)),
         ("bench_autotune",
          lambda: bench_autotune.run(smoke=args.smoke)),
+        ("bench_serving",
+         lambda: bench_serving.run(smoke=args.smoke)),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")
@@ -94,7 +104,8 @@ def main() -> None:
             print(f"{name},0,ERROR", flush=True)
             traceback.print_exc()
         records = {"bench_bucketing": (bench_bucketing, "BENCH_reduction"),
-                   "bench_autotune": (bench_autotune, "BENCH_autotune")}
+                   "bench_autotune": (bench_autotune, "BENCH_autotune"),
+                   "bench_serving": (bench_serving, "BENCH_serving")}
         if name in records and records[name][0].RECORDS:
             # smoke runs go to a sibling file so they never clobber the
             # checked-in full-round snapshot (README "Bucketed reductions")

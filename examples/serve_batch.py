@@ -13,7 +13,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build
 from repro.models.stubs import mrope_positions, vision_patch_embeds
-from repro.serve import GenerationConfig, ServeEngine, describe_cache
+from repro.serve import (GenerationConfig, PagedServeEngine, ServeEngine,
+                         describe_cache)
 
 cfg = get_config("qwen2-vl-2b").reduced()
 bundle = build(cfg, cache_dtype=jnp.float32)
@@ -46,3 +47,21 @@ extras = {
 out = engine.generate(tokens, extras=extras)
 print(f"multimodal generate ({nv} patches + {st} text): {out[0].tolist()}")
 print("decode cache:", describe_cache(cfg, batch=1, max_len=96))
+
+# --- same queue through the paged engine: continuous batching means a
+# finished request's slot (and its KV pages) is refilled mid-stream
+# instead of waiting for its wave ---
+paged = PagedServeEngine(bundle, params, slots=2, page_size=8, max_len=96,
+                         prefill_chunk=8, cache_dtype=jnp.float32,
+                         gen=GenerationConfig(max_new_tokens=8,
+                                              temperature=0.7, seed=1))
+t0 = time.time()
+presults = paged.serve_queue(requests)
+dt = time.time() - t0
+print(f"paged: served {len(presults)} requests in {dt:.1f}s "
+      f"(pool {paged.alloc.n_pages - 1} pages, "
+      f"peak {paged.alloc.peak_in_use} in use, "
+      f"{paged.prefill_traces}+{paged.decode_traces} compiles)")
+for r in presults[:3]:
+    print(f"  req {r.request_id}: {len(r.prompt)} prompt toks -> "
+          f"{r.tokens.tolist()} in {r.decode_steps} decode steps")

@@ -33,6 +33,32 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
               interpret=(impl == "pallas_interpret"))
 
 
+def flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
+                 window: int = 0, scale: Optional[float] = None,
+                 impl: str = "auto") -> jax.Array:
+    """Dispatchable paged decode attention (the serving hot path).
+
+    q [B, Hq, D] — one query token per sequence; k_pages/v_pages
+    [Hkv, P, page, D] — the paged pool; block_tables [B, max_pages]
+    int32; lengths [B] int32 (valid tokens per sequence incl. the query).
+
+    ``impl="auto"`` picks the compiled Pallas kernel
+    (kernels/flash_decode.py) on a TPU backend and the XLA gather oracle
+    (kernels/ref.py::flash_decode_ref) everywhere else — same fallback
+    contract as ``topk_compress``'s ``compaction="auto"``:
+    ``"pallas_interpret"`` runs the kernel body in Python on CPU for
+    correctness validation without hardware.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return kref.flash_decode_ref(q, k_pages, v_pages, block_tables,
+                                     lengths, window=window, scale=scale)
+    from repro.kernels.flash_decode import flash_decode as fd
+    return fd(q, k_pages, v_pages, block_tables, lengths, window=window,
+              scale=scale, interpret=(impl == "pallas_interpret"))
+
+
 def topk_compress(x, k: int, *, impl: str = "xla", block_n: int = 1024,
                   compaction: str = "auto") -> Tuple[jax.Array, jax.Array]:
     """Dispatchable magnitude top-k selection: x [rows, n] ->

@@ -42,6 +42,62 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, s, hq, d).astype(q.dtype)
 
 
+def gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Materialize a paged pool as a dense per-sequence cache.
+
+    pages [Hkv, P, page, D] (the serving pool layout: head-major so one
+    kv head streams contiguously); block_tables [B, max_pages] int32 ->
+    dense [B, max_pages * page, Hkv, D].  Entry ``j`` of the dense view is
+    global cache position ``j`` because a sequence's block table lists its
+    pages in position order.
+    """
+    hkv, _, page, d = pages.shape
+    b, maxp = block_tables.shape
+    g = pages[:, block_tables]                     # [Hkv, B, maxp, page, D]
+    return g.transpose(1, 2, 3, 0, 4).reshape(b, maxp * page, hkv, d)
+
+
+def flash_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     block_tables: jax.Array, lengths: jax.Array, *,
+                     window: int = 0,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Reference paged decode attention (XLA gather path).
+
+    One query token per sequence against a paged KV pool:
+      q [B, Hq, D]; k_pages/v_pages [Hkv, P, page, D];
+      block_tables [B, max_pages] int32; lengths [B] int32 — valid cache
+      tokens per sequence INCLUDING the current one (the query sits at
+      position lengths-1, already written into its page).
+
+    Key j is visible iff j < lengths[b] and (window == 0 or
+    lengths[b]-1 - j < window).  Sequences with lengths == 0 (inactive
+    slots) produce zeros instead of NaN.  Returns [B, Hq, D] in q.dtype.
+    """
+    b, hq, d = q.shape
+    hkv = k_pages.shape[0]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    k = gather_pages(k_pages, block_tables)        # [B, T, Hkv, D]
+    v = gather_pages(v_pages, block_tables)
+    t = k.shape[1]
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg,
+                        k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(t)[None, :]
+    valid = kpos < lengths[:, None]
+    if window:
+        valid &= (lengths[:, None] - 1 - kpos) < window
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    # all-masked rows (inactive slots): uniform probs would mix garbage,
+    # so zero the output instead
+    any_valid = valid.any(axis=1)[:, None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v.astype(jnp.float32))
+    out = jnp.where(any_valid, out, 0.0)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
 def topk_compress_ref(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     """Per-row magnitude top-k selection (the sparse-reducer hot path).
 

@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
       --requests 6 --prompt-len 16 --max-new 8
+
+  # paged continuous batching (token-level slot refill):
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-34b --paged \
+      --requests 8 --slots 4 --block-size 16 --max-new 8
 """
 from __future__ import annotations
 
@@ -13,7 +17,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build
-from repro.serve import GenerationConfig, ServeEngine
+from repro.serve import GenerationConfig, PagedServeEngine, ServeEngine
 
 
 def main() -> None:
@@ -26,30 +30,54 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous batching over a paged KV cache "
+                         "(PagedServeEngine) instead of wave batching")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV page size in tokens")
+    ap.add_argument("--budget-mb", type=float, default=0.0,
+                    help="paged pool byte budget (0 => size for "
+                         "slots x max_len)")
+    ap.add_argument("--decode-impl", default="auto",
+                    choices=["auto", "xla", "pallas", "pallas_interpret"],
+                    help="flash-decode kernel dispatch for the paged path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    bundle = build(cfg)
+    bundle = build(cfg, decode_impl=args.decode_impl)
     params = bundle.init(jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(
-        bundle, params, max_len=args.prompt_len + args.max_new,
-        gen=GenerationConfig(max_new_tokens=args.max_new,
-                             temperature=args.temperature, seed=args.seed))
+    max_len = args.prompt_len + args.max_new
+    gen = GenerationConfig(max_new_tokens=args.max_new,
+                           temperature=args.temperature, seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
     reqs = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
             .astype(np.int32) for _ in range(args.requests)]
     t0 = time.time()
-    results = engine.serve_queue(reqs, slots=args.slots)
+    if args.paged:
+        budget = int(args.budget_mb * 2 ** 20) or None
+        engine = PagedServeEngine(
+            bundle, params, slots=args.slots, page_size=args.block_size,
+            max_len=max_len, budget_bytes=budget, gen=gen)
+        results = engine.serve_queue(reqs)
+    else:
+        engine = ServeEngine(bundle, params, max_len=max_len, gen=gen)
+        results = engine.serve_queue(reqs, slots=args.slots)
     dt = time.time() - t0
     total_new = sum(r.steps for r in results)
+    total_steps = sum(r.decode_steps for r in results)
     for r in results[:4]:
         print(f"req {r.request_id}: prompt[-4:]={r.prompt[-4:]} "
               f"-> {r.tokens[:8]}")
-    print(f"{len(results)} requests, {total_new} tokens in {dt:.1f}s "
-          f"({total_new/dt:.1f} tok/s incl. compile)")
+    print(f"{len(results)} requests, {total_new} tokens / {total_steps} "
+          f"decode steps in {dt:.1f}s ({total_new/dt:.1f} tok/s incl. "
+          f"compile)")
+    if args.paged:
+        print(f"pool: {engine.alloc.n_pages - 1} pages of "
+              f"{args.block_size} tokens, peak in use "
+              f"{engine.alloc.peak_in_use}")
 
 
 if __name__ == "__main__":

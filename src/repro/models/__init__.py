@@ -11,7 +11,8 @@ from repro.models.transformer import (ModelBundle, build_decoder_lm,
 def build(cfg: ArchConfig, *, param_dtype=jnp.float32, compute_dtype=None,
           remat: bool = False, impl: str = "xla",
           rolling_decode: bool = False,
-          cache_dtype=jnp.bfloat16) -> ModelBundle:
+          cache_dtype=jnp.bfloat16,
+          decode_impl: str = "auto") -> ModelBundle:
     kw = dict(param_dtype=param_dtype, compute_dtype=compute_dtype,
               remat=remat, impl=impl, cache_dtype=cache_dtype)
     if cfg.family == "ssm":
@@ -22,4 +23,5 @@ def build(cfg: ArchConfig, *, param_dtype=jnp.float32, compute_dtype=None,
         from repro.models.encdec import build_encdec
         return build_encdec(cfg, **kw)
     # dense / moe / vlm share the decoder-LM assembly
-    return build_decoder_lm(cfg, rolling_decode=rolling_decode, **kw)
+    return build_decoder_lm(cfg, rolling_decode=rolling_decode,
+                            decode_impl=decode_impl, **kw)

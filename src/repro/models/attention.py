@@ -86,7 +86,11 @@ def full_attention(q, k, v, *, causal: bool = True, window: int = 0,
     """Dispatchable attention; ``impl`` in {"xla", "pallas", "pallas_interpret"}."""
     d = q.shape[-1]
     scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
-    if impl.startswith("pallas") and causal and extra_mask is None:
+    # q_offset may be a traced scalar (paged chunk prefill) — only the
+    # static-zero case is eligible for the offset-free fast paths
+    static_zero_offset = isinstance(q_offset, int) and q_offset == 0
+    if impl.startswith("pallas") and causal and extra_mask is None \
+            and static_zero_offset:
         from repro.kernels import ops as kops
         return kops.flash_attention(
             q, k, v, causal=True, window=window, scale=float(scale),
@@ -94,7 +98,7 @@ def full_attention(q, k, v, *, causal: bool = True, window: int = 0,
     b, s, _, _ = q.shape
     t = k.shape[1]
     q_chunk = _pick_q_chunk(t)
-    if (causal and extra_mask is None and q_offset == 0
+    if (causal and extra_mask is None and static_zero_offset
             and s >= 2 * q_chunk and s % q_chunk == 0):
         return _chunked_causal_attend(q, k, v, window=window, scale=scale,
                                       q_chunk=q_chunk)
@@ -228,6 +232,105 @@ def prefill_kv_cache(p: Params, x, cos, sin, *, n_heads, n_kv_heads, head_dim,
     return cache
 
 
+# --------------------------- paged cache ------------------------------ #
+#
+# The serving engine's paged layout (serve/kvcache.py): K/V live in a
+# global pool of fixed-size pages, [Hkv, P, page, D] per layer (head-major
+# so the flash-decode kernel streams one (page, D) tile per grid step);
+# each sequence owns an ordered block table of page ids.  Page 0 is the
+# null page — unallocated table entries point at it and inactive slots'
+# writes are directed there.
+
+def init_paged_kv(n_pages: int, page_size: int, n_kv_heads: int,
+                  head_dim: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return {
+        "k": jnp.zeros((n_kv_heads, n_pages, page_size, head_dim), dtype),
+        "v": jnp.zeros((n_kv_heads, n_pages, page_size, head_dim), dtype),
+    }
+
+
+def paged_slot_coords(block_tables, lengths, active, page_size: int):
+    """(page_ids [B], offsets [B]) where each slot's NEXT token is written;
+    inactive slots are redirected to the null page 0."""
+    idx = lengths // page_size
+    page_ids = jnp.take_along_axis(block_tables, idx[:, None], axis=1)[:, 0]
+    page_ids = jnp.where(active, page_ids, 0)
+    return page_ids, lengths % page_size
+
+
+def gqa_decode_paged(p: Params, x, pages: Dict[str, Any], block_tables,
+                     lengths, active, cos, sin, *, n_heads: int,
+                     n_kv_heads: int, head_dim: int, window: int = 0,
+                     impl: str = "auto"
+                     ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode against a paged pool (per-slot positions).
+
+    x [B,1,d]; block_tables [B, max_pages] int32; lengths [B] int32 —
+    tokens cached so far per slot (the new token is written at position
+    ``lengths`` and the attend covers ``lengths + active`` tokens);
+    active [B] bool masks serving slots that are mid-sequence.  Unlike
+    the dense ``gqa_decode`` (one shared scalar ``pos``), every slot
+    advances independently — the property continuous batching needs.
+    ``impl`` routes the attend through kernels/ops.py::flash_decode.
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    if cos is not None:
+        q = apply_rope(q, cos[:, :, None], sin[:, :, None])
+        k = apply_rope(k, cos[:, :, None], sin[:, :, None])
+    page = pages["k"].shape[2]
+    page_ids, offs = paged_slot_coords(block_tables, lengths, active, page)
+    # [B,1,Hkv,D] -> [Hkv,B,D] scatter rows into (page_id, offset) slots
+    new_k = pages["k"].at[:, page_ids, offs].set(
+        k[:, 0].transpose(1, 0, 2).astype(pages["k"].dtype))
+    new_v = pages["v"].at[:, page_ids, offs].set(
+        v[:, 0].transpose(1, 0, 2).astype(pages["v"].dtype))
+    from repro.kernels import ops as kops
+    att_len = lengths + active.astype(lengths.dtype)
+    out = kops.flash_decode(q[:, 0], new_k, new_v, block_tables, att_len,
+                            window=window, impl=impl)
+    out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype) @ p["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+def gqa_prefill_paged_chunk(p: Params, x, pages: Dict[str, Any],
+                            block_tables, base, cos, sin, *, n_heads: int,
+                            n_kv_heads: int, head_dim: int, window: int = 0
+                            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One prompt chunk of a paged prefill.
+
+    x [B,C,d] — chunk tokens at global positions base..base+C-1 (``base``
+    may be traced, so any chunk count compiles once); K/V are written
+    into the chunk's pages, then the chunk queries attend every cached
+    position (earlier chunks + causal within this one) through the
+    gathered pool.  The padded tail of the final chunk writes garbage
+    past the true length — masked out of every later attend and
+    overwritten by decode, exactly like unreached dense-cache slots.
+    """
+    b, c, _ = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    if cos is not None:
+        q = apply_rope(q, cos[:, :, None], sin[:, :, None])
+        k = apply_rope(k, cos[:, :, None], sin[:, :, None])
+    page = pages["k"].shape[2]
+    pos = base + jnp.arange(c)                        # [C]
+    tbl = jnp.broadcast_to(block_tables, (b, block_tables.shape[1]))
+    page_ids = jnp.take_along_axis(tbl, pos[None] // page, axis=1)  # [B,C]
+    offs = pos % page
+    # [B,C,Hkv,D] -> per batch row scatter [Hkv, B, C, D]
+    new_k = pages["k"].at[:, page_ids, offs[None]].set(
+        k.transpose(2, 0, 1, 3).astype(pages["k"].dtype))
+    new_v = pages["v"].at[:, page_ids, offs[None]].set(
+        v.transpose(2, 0, 1, 3).astype(pages["v"].dtype))
+    from repro.kernels import ref as kref
+    kd = kref.gather_pages(new_k, tbl).astype(q.dtype)   # [B,T,Hkv,D]
+    vd = kref.gather_pages(new_v, tbl).astype(q.dtype)
+    out = full_attention(q, kd, vd, causal=True, window=window,
+                         q_offset=base)
+    out = out.reshape(b, c, n_heads * head_dim) @ p["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
 # ===================================================================== #
 # MLA (Multi-head Latent Attention, DeepSeek-V2)
 # ===================================================================== #
@@ -356,3 +459,107 @@ def mla_decode(p: Params, x, cache, cos, sin, *, n_heads: int, kv_lora: int,
     out = out.reshape(b, 1, n_heads * v_dim) @ p["wo"]
     new_cache = dict(cache, ckv=ckv, k_rope=krc, pos=pos + 1)
     return out, new_cache
+
+
+# --------------------------- paged MLA -------------------------------- #
+#
+# Latent pages have no head axis — the pool is [P, page, kv_lora] (+ the
+# shared rope key [P, page, qk_rope]), so paging the MLA cache is the same
+# block-table indirection at ~1/8 the bytes of a GQA pool.  Both the
+# decode step and the chunk prefill use the absorbed formulation (scores
+# and context in latent space, K/V never materialized).
+
+def init_paged_mla(n_pages: int, page_size: int, kv_lora: int,
+                   qk_rope: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return {
+        "ckv": jnp.zeros((n_pages, page_size, kv_lora), dtype),
+        "kr": jnp.zeros((n_pages, page_size, qk_rope), dtype),
+    }
+
+
+def _gather_latent(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """pages [P, page, R], tables [B, maxp] -> dense [B, maxp*page, R]."""
+    b, maxp = block_tables.shape
+    page, r = pages.shape[1], pages.shape[2]
+    return pages[block_tables].reshape(b, maxp * page, r)
+
+
+def _mla_absorbed_attend(p, q_nope, q_rope, ckv_d, kr_d, mask, *,
+                         n_heads, kv_lora, qk_nope, qk_rope, v_dim):
+    """Absorbed-latent attention for S queries.
+
+    q_nope [B,S,H,nope], q_rope [B,S,H,rope]; ckv_d [B,T,lora],
+    kr_d [B,T,rope]; mask [B,S,T] bool.  Rows with no valid key (inactive
+    serving slots) output zeros.  Returns [B, S, H*v_dim].
+    """
+    b, s = q_nope.shape[:2]
+    w_uk = p["w_uk"].reshape(kv_lora, n_heads, qk_nope)
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, w_uk)
+    scale = 1.0 / jnp.sqrt(float(qk_nope + qk_rope))
+    scores = (jnp.einsum("bshl,btl->bhst", q_lat,
+                         ckv_d.astype(q_lat.dtype))
+              + jnp.einsum("bshd,btd->bhst", q_rope,
+                           kr_d.astype(q_rope.dtype))).astype(jnp.float32)
+    scores = jnp.where(mask[:, None], scores * scale, NEG_INF)
+    probs = jax.nn.softmax(scores, -1).astype(ckv_d.dtype)
+    ctx = jnp.einsum("bhst,btl->bshl", probs, ckv_d)
+    ctx = jnp.where(mask.any(-1)[:, :, None, None], ctx, 0.0)
+    w_uv = p["w_uv"].reshape(kv_lora, n_heads, v_dim)
+    out = jnp.einsum("bshl,lhv->bshv", ctx.astype(q_nope.dtype), w_uv)
+    return out.reshape(b, s, n_heads * v_dim)
+
+
+def mla_decode_paged(p: Params, x, pages: Dict[str, Any], block_tables,
+                     lengths, active, cos, sin, *, n_heads: int,
+                     kv_lora: int, qk_nope: int, qk_rope: int, v_dim: int,
+                     eps: float = 1e-5
+                     ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Absorbed one-token decode against latent pages (per-slot lengths)."""
+    b = x.shape[0]
+    q_nope, q_rope = _mla_q(p, x, n_heads, qk_nope, qk_rope, cos, sin)
+    ckv_new, kr_new = _mla_latents(p, x, cos, sin, eps)        # [B,1,*]
+    page = pages["ckv"].shape[1]
+    page_ids, offs = paged_slot_coords(block_tables, lengths, active, page)
+    ckv = pages["ckv"].at[page_ids, offs].set(
+        ckv_new[:, 0].astype(pages["ckv"].dtype))
+    kr = pages["kr"].at[page_ids, offs].set(
+        kr_new[:, 0].astype(pages["kr"].dtype))
+    ckv_d = _gather_latent(ckv, block_tables)
+    kr_d = _gather_latent(kr, block_tables)
+    att_len = lengths + active.astype(lengths.dtype)
+    mask = (jnp.arange(ckv_d.shape[1])[None] < att_len[:, None])[:, None]
+    out = _mla_absorbed_attend(p, q_nope, q_rope, ckv_d, kr_d, mask,
+                               n_heads=n_heads, kv_lora=kv_lora,
+                               qk_nope=qk_nope, qk_rope=qk_rope,
+                               v_dim=v_dim)
+    return out.astype(x.dtype) @ p["wo"], {"ckv": ckv, "kr": kr}
+
+
+def mla_prefill_paged_chunk(p: Params, x, pages: Dict[str, Any],
+                            block_tables, base, cos, sin, *, n_heads: int,
+                            kv_lora: int, qk_nope: int, qk_rope: int,
+                            v_dim: int, eps: float = 1e-5
+                            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One prompt chunk of a paged MLA prefill (see gqa_prefill_paged_chunk)."""
+    b, c, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, n_heads, qk_nope, qk_rope, cos, sin)
+    ckv_new, kr_new = _mla_latents(p, x, cos, sin, eps)        # [B,C,*]
+    page = pages["ckv"].shape[1]
+    pos = base + jnp.arange(c)
+    tbl = jnp.broadcast_to(block_tables, (b, block_tables.shape[1]))
+    page_ids = jnp.take_along_axis(tbl, pos[None] // page, axis=1)  # [B,C]
+    offs = jnp.broadcast_to(pos % page, (b, c))
+    ckv = pages["ckv"].at[page_ids, offs].set(
+        ckv_new.astype(pages["ckv"].dtype))
+    kr = pages["kr"].at[page_ids, offs].set(
+        kr_new.astype(pages["kr"].dtype))
+    ckv_d = _gather_latent(ckv, tbl)
+    kr_d = _gather_latent(kr, tbl)
+    kpos = jnp.arange(ckv_d.shape[1])[None, None]              # [1,1,T]
+    mask = jnp.broadcast_to(kpos <= pos[None, :, None],
+                            (b, c, ckv_d.shape[1]))
+    out = _mla_absorbed_attend(p, q_nope, q_rope, ckv_d, kr_d, mask,
+                               n_heads=n_heads, kv_lora=kv_lora,
+                               qk_nope=qk_nope, qk_rope=qk_rope,
+                               v_dim=v_dim)
+    return out.astype(x.dtype) @ p["wo"], {"ckv": ckv, "kr": kr}

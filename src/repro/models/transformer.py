@@ -23,9 +23,13 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import hybrid as hyb
 from repro.models import rwkv6 as rwk
-from repro.models.attention import (gqa_attention, gqa_decode, gqa_init,
-                                    init_kv_cache, init_mla_cache,
-                                    mla_attention, mla_decode, mla_init,
+from repro.models.attention import (gqa_attention, gqa_decode,
+                                    gqa_decode_paged, gqa_init,
+                                    gqa_prefill_paged_chunk, init_kv_cache,
+                                    init_mla_cache, init_paged_kv,
+                                    init_paged_mla, mla_attention,
+                                    mla_decode, mla_decode_paged, mla_init,
+                                    mla_prefill_paged_chunk,
                                     prefill_kv_cache, mla_prefill_cache)
 from repro.models.common import (Params, embed_init, dense_init,
                                  mrope_cos_sin, rmsnorm, rmsnorm_init,
@@ -114,6 +118,55 @@ def layer_decode(p: Params, x, cache, cos, sin, cfg: ArchConfig,
     return x + f, cache
 
 
+def _layer_ffn(p: Params, x, cfg: ArchConfig, use_moe: bool):
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        f, _ = moe_apply(p["ffn"], h, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, act=cfg.act,
+                         capacity_factor=cfg.capacity_factor)
+    else:
+        f = mlp_apply(p["ffn"], h, cfg.act)
+    return x + f
+
+
+def layer_decode_paged(p: Params, x, pages, block_tables, lengths, active,
+                       cos, sin, cfg: ArchConfig, use_moe: bool,
+                       decode_impl: str):
+    """One layer of the paged decode step (per-slot positions)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.kv_lora_rank:
+        a, pages = mla_decode_paged(
+            p["attn"], h, pages, block_tables, lengths, active, cos, sin,
+            n_heads=cfg.n_heads, kv_lora=cfg.kv_lora_rank,
+            qk_nope=cfg.qk_nope_head_dim, qk_rope=cfg.qk_rope_head_dim,
+            v_dim=cfg.v_head_dim, eps=cfg.norm_eps)
+    else:
+        a, pages = gqa_decode_paged(
+            p["attn"], h, pages, block_tables, lengths, active, cos, sin,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, window=cfg.sliding_window,
+            impl=decode_impl)
+    return _layer_ffn(p, x + a, cfg, use_moe), pages
+
+
+def layer_prefill_paged(p: Params, x, pages, block_tables, base, cos, sin,
+                        cfg: ArchConfig, use_moe: bool):
+    """One layer of one paged-prefill chunk (positions base..base+C-1)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.kv_lora_rank:
+        a, pages = mla_prefill_paged_chunk(
+            p["attn"], h, pages, block_tables, base, cos, sin,
+            n_heads=cfg.n_heads, kv_lora=cfg.kv_lora_rank,
+            qk_nope=cfg.qk_nope_head_dim, qk_rope=cfg.qk_rope_head_dim,
+            v_dim=cfg.v_head_dim, eps=cfg.norm_eps)
+    else:
+        a, pages = gqa_prefill_paged_chunk(
+            p["attn"], h, pages, block_tables, base, cos, sin,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, window=cfg.sliding_window)
+    return _layer_ffn(p, x + a, cfg, use_moe), pages
+
+
 # ===================================================================== #
 # bundle
 # ===================================================================== #
@@ -128,6 +181,15 @@ class ModelBundle:
     init_cache: Callable
     # extras
     forward: Optional[Callable] = None
+    # paged serving (None for families with constant-size state caches):
+    #   init_paged_cache(n_pages, page_size) -> pages pytree [L, ...]
+    #   prefill_paged_chunk(params, tokens [B,C], pages, tables, base)
+    #       -> (logits [B,C,V], pages)
+    #   decode_step_paged(params, tokens [B], pages, tables, lengths,
+    #       active) -> (logits [B,V], pages)
+    init_paged_cache: Optional[Callable] = None
+    prefill_paged_chunk: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
 
 
 def _rope_for(cfg: ArchConfig, positions):
@@ -155,8 +217,14 @@ def _split_layers(cfg: ArchConfig) -> Tuple[int, int]:
 def build_decoder_lm(cfg: ArchConfig, *, param_dtype=jnp.float32,
                      compute_dtype=None, remat: bool = False,
                      impl: str = "xla", rolling_decode: bool = False,
-                     cache_dtype=jnp.bfloat16) -> ModelBundle:
-    """dense / moe / mla / vlm families."""
+                     cache_dtype=jnp.bfloat16,
+                     decode_impl: str = "auto") -> ModelBundle:
+    """dense / moe / mla / vlm families.
+
+    ``decode_impl`` picks the paged decode-attention kernel
+    (kernels/ops.py::flash_decode dispatch): "auto" / "xla" / "pallas" /
+    "pallas_interpret".  It only affects decode_step_paged.
+    """
     compute_dtype = compute_dtype or param_dtype
     n_pre, n_main = _split_layers(cfg)
     window = cfg.sliding_window
@@ -354,9 +422,88 @@ def build_decoder_lm(cfg: ArchConfig, *, param_dtype=jnp.float32,
                                  new_pre, new_main)
         return x, new_cache
 
+    # ---------------------- paged serving ---------------------------- #
+    # Pages are stacked on the layer dim like the dense cache and
+    # threaded through the same layer scan; the block table and per-slot
+    # lengths stay OUTSIDE the per-layer pytree (one copy, closed over by
+    # the scan bodies) because every layer shares them.
+
+    def init_paged_cache(n_pages: int, page_size: int):
+        def one(_):
+            if cfg.kv_lora_rank:
+                return init_paged_mla(n_pages, page_size, cfg.kv_lora_rank,
+                                      cfg.qk_rope_head_dim, cache_dtype)
+            return init_paged_kv(n_pages, page_size, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim, cache_dtype)
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[one(i) for i in range(cfg.n_layers)])
+
+    def _scan_paged(params, x, pages, body_for):
+        """Run the (dense-prefix +) main stacks over stacked pages."""
+        if not n_pre:
+            return scan_layers_with_cache(body_for(cfg.uses_moe), x,
+                                          params["layers"], pages)
+        pre = jax.tree.map(lambda a: a[:n_pre], pages)
+        main = jax.tree.map(lambda a: a[n_pre:], pages)
+        x, new_pre = scan_layers_with_cache(body_for(False), x,
+                                            params["layers_dense"], pre)
+        x, new_main = scan_layers_with_cache(body_for(cfg.uses_moe), x,
+                                             params["layers"], main)
+        return x, jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                               new_pre, new_main)
+
+    def _positions_for(pos):
+        """pos [B,S] int32 -> rope positions ([B,S] or [B,S,3] M-RoPE)."""
+        if cfg.mrope:
+            return jnp.stack([pos, pos, pos], axis=-1)
+        return pos
+
+    def prefill_paged_chunk(params, tokens, pages, block_tables, base):
+        """One prompt chunk: tokens [B,C] at global positions
+        base..base+C-1 (base is traced — any chunk index reuses the one
+        compiled program).  Returns (logits [B,C,V], pages)."""
+        b, c = tokens.shape
+        pos = base + jnp.broadcast_to(jnp.arange(c), (b, c))
+        cos, sin = _rope_for(cfg, _positions_for(pos.astype(jnp.int32)))
+        x = params["embed"][tokens].astype(compute_dtype)
+
+        def body_for(use_moe):
+            def body(x, lp, lpg):
+                return layer_prefill_paged(lp, x, lpg, block_tables, base,
+                                           cos, sin, cfg, use_moe)
+            return body
+
+        x, new_pages = _scan_paged(params, x, pages, body_for)
+        h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return _unembed(params, cfg, h), new_pages
+
+    def decode_step_paged(params, tokens, pages, block_tables, lengths,
+                          active):
+        """One decode step over the slot array: tokens [B], per-slot
+        ``lengths`` [B] (cached tokens so far — the position each slot's
+        token is written at), ``active`` [B] bool.  Returns
+        (logits [B,V], pages)."""
+        b = tokens.shape[0]
+        pos = lengths.astype(jnp.int32)[:, None]          # [B,1] per slot
+        cos, sin = _rope_for(cfg, _positions_for(pos))
+        x = params["embed"][tokens][:, None].astype(compute_dtype)
+
+        def body_for(use_moe):
+            def body(x, lp, lpg):
+                return layer_decode_paged(lp, x, lpg, block_tables,
+                                          lengths, active, cos, sin, cfg,
+                                          use_moe, decode_impl)
+            return body
+
+        x, new_pages = _scan_paged(params, x, pages, body_for)
+        h = rmsnorm(params["final_norm"], x[:, 0:1], cfg.norm_eps)
+        return _unembed(params, cfg, h[:, 0]), new_pages
+
     return ModelBundle(cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill,
                        decode_step=decode_step, init_cache=init_cache,
-                       forward=forward)
+                       forward=forward, init_paged_cache=init_paged_cache,
+                       prefill_paged_chunk=prefill_paged_chunk,
+                       decode_step_paged=decode_step_paged)
 
 
 # ===================================================================== #

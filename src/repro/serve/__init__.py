@@ -1,2 +1,5 @@
-from repro.serve.engine import ServeEngine, GenerationConfig  # noqa: F401
-from repro.serve.kvcache import cache_bytes, describe_cache  # noqa: F401
+from repro.serve.engine import (GenerationConfig, PagedServeEngine,  # noqa: F401
+                                RequestResult, ServeEngine)
+from repro.serve.kvcache import (BlockAllocator, cache_bytes,  # noqa: F401
+                                 describe_cache, page_bytes, pages_for,
+                                 pool_pages)

@@ -1,22 +1,41 @@
-"""Batched serving engine: prefill + jitted decode loop + slot-based
-continuous batching (lite).
+"""Serving engines: wave-batched dense baseline + paged continuous batching.
 
-The decode loop is a single jitted ``lax.scan`` over ``max_new_tokens``
-steps, so the whole generation of a batch is two XLA programs (prefill,
-scan-decode) regardless of length.  The request loop keeps a fixed number of
-batch slots and refills finished slots from the queue — the standard
-production pattern, minus preemption.
+``ServeEngine`` is the dense baseline: prefill + one jitted ``lax.scan``
+over ``max_new_tokens`` decode steps, requests grouped into fixed waves.
+Every request in a wave decodes to ``max_new_tokens`` even if it hit EOS
+at step 2 — the wasted steps are what ``RequestResult.decode_steps``
+makes visible and what ``PagedServeEngine`` eliminates.
+
+``PagedServeEngine`` is token-level continuous batching over a paged KV
+cache (serve/kvcache.py):
+
+  * one jitted decode step over a FIXED slot array with an active mask —
+    slot population changes never recompile, they only flip mask bits;
+  * finished slots are refilled from the queue between steps, their pages
+    released to the pool the moment they finish;
+  * newcomers prefill in fixed-size chunks interleaved with resident
+    decode steps, so a long prompt never stalls the running batch, and
+    the traced chunk base means any prompt length reuses one compiled
+    chunk program.
+
+Note on MoE archs: expert capacity applies per routing group, so a
+capacity-dropped MoE routes chunked prefill groups differently from a
+full-prompt prefill.  With a dropless capacity factor
+(``cf >= n_experts / top_k``) chunking is mathematically invisible and
+paged/dense greedy outputs are bit-identical (see models/moe.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import ModelBundle
+from repro.serve.kvcache import BlockAllocator, pages_for, pool_pages
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +51,23 @@ class RequestResult:
     request_id: int
     prompt: np.ndarray
     tokens: np.ndarray              # generated tokens (trimmed at EOS)
-    steps: int
+    steps: int                      # == len(tokens) (post-trim)
+    # decode iterations actually spent on this request (prefill's free
+    # first token excluded).  For the dense wave engine this is always
+    # max_new_tokens - 1 — EOS does not stop the wave — so
+    # (decode_steps - (steps - 1)) / decode_steps is the wasted-step
+    # ratio the paged engine's token-level refill removes.
+    decode_steps: int = 0
+
+
+def _bucket_len(n: int, floor: int = 8) -> int:
+    """Next power-of-two >= n (>= floor) — the serve_queue prompt pad
+    target, so arbitrary prompt lengths hit a log-bounded set of compiled
+    prefill shapes instead of one program per length."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
 
 
 class ServeEngine:
@@ -43,6 +78,12 @@ class ServeEngine:
         self.params = params
         self.max_len = max_len
         self.gen = gen
+        # trace-time counters: the increment is a python side effect, so
+        # it runs only when jit actually (re)traces — a cheap compile
+        # counter for tests and for spotting shape-bucketing regressions.
+        self.prefill_traces = 0
+        self.decode_traces = 0
+        self.finish_times: Dict[int, float] = {}
         self._prefill = jax.jit(self._prefill_impl)
         self._decode_scan = jax.jit(self._decode_scan_impl,
                                     static_argnames=("steps",))
@@ -51,6 +92,7 @@ class ServeEngine:
 
     def _prefill_impl(self, params, batch):
         # max_len is a static python int (cache allocation size), not traced
+        self.prefill_traces += 1
         return self.bundle.prefill(params,
                                    dict(batch, max_len=self.max_len))
 
@@ -61,6 +103,8 @@ class ServeEngine:
             key, logits / self.gen.temperature).astype(jnp.int32)
 
     def _decode_scan_impl(self, params, first_tok, cache, key, *, steps: int):
+        self.decode_traces += 1
+
         def step(carry, k):
             tok, cache = carry
             logits, cache = self.bundle.decode_step(params, tok, cache)
@@ -93,30 +137,321 @@ class ServeEngine:
     # ------------------------------------------------------------ #
 
     def serve_queue(self, requests: Sequence[np.ndarray], *,
-                    slots: int = 4) -> List[RequestResult]:
+                    slots: int = 4,
+                    max_new: Optional[Sequence[int]] = None
+                    ) -> List[RequestResult]:
         """Slot-based batched serving of a request queue.
 
-        Requests (token arrays, same length per wave) are grouped into waves
-        of ``slots``; each wave shares prefill + decode programs (recompiled
-        only when the prompt length changes).
+        Requests (token arrays) are grouped into waves of ``slots``; each
+        wave left-pads to the power-of-two bucket of its longest prompt,
+        so mixed-length queues compile one prefill program per bucket
+        (log many) instead of one per distinct length.
+
+        ``max_new`` optionally carries a per-request token budget (like a
+        per-request sampling param).  The wave still decodes the full
+        ``gen.max_new_tokens`` scan — a request that wanted fewer tokens
+        burns the remaining steps as padding, which is exactly the
+        wasted-step cost ``decode_steps`` exposes and the paged engine
+        avoids.  Per-request completion times (seconds since the call
+        started) are left in ``self.finish_times``.
         """
         results: List[RequestResult] = []
         queue = list(enumerate(requests))
         eos = self.gen.eos_id
+        self.finish_times: Dict[int, float] = {}
+        t0 = time.time()
         while queue:
             wave = queue[:slots]
             queue = queue[slots:]
             ids = [i for i, _ in wave]
-            lens = {len(p) for _, p in wave}
-            # pad the wave to a single prompt length (left-pad with 0)
-            L = max(lens)
+            longest = max(len(p) for _, p in wave)
+            if longest > self.max_len:
+                raise ValueError(f"prompt length {longest} exceeds "
+                                 f"max_len {self.max_len}")
+            # pad the wave to the bucketed prompt length (left-pad with 0)
+            L = min(_bucket_len(longest), self.max_len)
             prompts = np.zeros((len(wave), L), np.int32)
             for r, (_, p) in enumerate(wave):
                 prompts[r, L - len(p):] = p
             toks = self.generate(jnp.asarray(prompts))
+            done = time.time() - t0
             for r, rid in enumerate(ids):
                 t = toks[r]
+                if max_new is not None:
+                    t = t[: max_new[rid]]
                 if eos >= 0 and (t == eos).any():
                     t = t[: int(np.argmax(t == eos)) + 1]
-                results.append(RequestResult(rid, prompts[r], t, len(t)))
+                results.append(RequestResult(
+                    rid, prompts[r], t, len(t),
+                    decode_steps=self.gen.max_new_tokens - 1))
+                self.finish_times[rid] = done
         return results
+
+
+# ===================================================================== #
+# paged continuous batching
+# ===================================================================== #
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side bookkeeping for one batch slot."""
+    state: str = "free"             # free | prefill | decode
+    rid: int = -1
+    prompt: Optional[np.ndarray] = None
+    plen: int = 0
+    target: int = 0                 # token budget for this request
+    base: int = 0                   # next prefill chunk start
+    pages: List[int] = dataclasses.field(default_factory=list)
+    reserved: int = 0               # reservation units not yet taken
+    toks: List[int] = dataclasses.field(default_factory=list)
+    decode_steps: int = 0
+    last_tok: int = 0
+
+
+class PagedServeEngine:
+    """Token-level continuous batching over a paged KV cache.
+
+    The decode hot loop is ONE jitted step over a fixed ``slots``-wide
+    array: per-slot cache lengths, an active mask, and a block table are
+    the only things that change between steps, so admission / completion
+    never recompiles anything.  Admission is gated by the page pool
+    (``cache_bytes``-denominated budget): a request enters a free slot
+    only when the allocator can reserve its worst-case page count, and
+    its pages return to the pool the moment it finishes.
+    """
+
+    def __init__(self, bundle: ModelBundle, params, *,
+                 slots: int = 4, page_size: int = 16,
+                 max_len: int = 1024, prefill_chunk: int = 32,
+                 budget_bytes: Optional[int] = None,
+                 cache_dtype=jnp.bfloat16,
+                 gen: GenerationConfig = GenerationConfig()):
+        if bundle.decode_step_paged is None:
+            raise ValueError(
+                f"arch '{bundle.cfg.name}' (family {bundle.cfg.family}) has "
+                f"a constant-size or unsupported decode state; paged "
+                f"serving needs a positional KV/latent cache — use "
+                f"ServeEngine")
+        self.bundle = bundle
+        self.params = params
+        self.slots = slots
+        self.page_size = page_size
+        self.max_len = max_len
+        self.chunk = prefill_chunk
+        self.gen = gen
+        # tables (and the no-budget pool default) cover the chunk-padded
+        # max length: the last prefill chunk writes masked garbage past
+        # the true prompt end, and those positions still need real pages
+        self.max_pages_per_seq = pages_for(self._padded(max_len), page_size)
+
+        n_pages = pool_pages(bundle.cfg, page_size,
+                             budget_bytes=budget_bytes, slots=slots,
+                             max_len=self._padded(max_len),
+                             cache_dtype=cache_dtype)
+        self.alloc = BlockAllocator(n_pages)
+        self.pages = bundle.init_paged_cache(n_pages, page_size)
+        self._slots = [_Slot() for _ in range(slots)]
+        self._tables = np.zeros((slots, self.max_pages_per_seq), np.int32)
+        self._lengths = np.zeros((slots,), np.int32)
+
+        self.prefill_traces = 0
+        self.decode_traces = 0
+        self.finish_times: Dict[int, float] = {}
+        self._t0 = 0.0
+        # host slot state changed since the last device upload
+        self._dirty = True
+        # pages donated: the pool is rebound to the returned buffer each
+        # step, so the O(pool) arrays are updated in place
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+        self._prefill_chunk = jax.jit(self._prefill_impl, donate_argnums=(2,))
+
+    # ------------------------------------------------------------ #
+    # jitted device steps
+
+    def _decode_impl(self, params, toks, pages, tables, lengths, active,
+                     key, step):
+        """One decode step.  Everything the steady-state loop needs next
+        step comes back as device arrays (next tokens, advanced lengths,
+        advanced rng step), so a run of decode steps with stable slot
+        population does ZERO host->device uploads — the host only reads
+        the sampled tokens back to check budgets/EOS."""
+        self.decode_traces += 1
+        logits, pages = self.bundle.decode_step_paged(
+            params, toks, pages, tables, lengths, active)
+        if self.gen.temperature <= 0.0:
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                jax.random.fold_in(key, step),
+                logits / self.gen.temperature).astype(jnp.int32)
+        return (jnp.where(active, nxt, 0), pages,
+                lengths + active.astype(jnp.int32), step + 1)
+
+    def _prefill_impl(self, params, toks, pages, table, base):
+        self.prefill_traces += 1
+        return self.bundle.prefill_paged_chunk(params, toks, pages, table,
+                                               base)
+
+    # ------------------------------------------------------------ #
+    # host-side slot machinery
+
+    def _padded(self, plen: int) -> int:
+        return -(-plen // self.chunk) * self.chunk
+
+    def _need_pages(self, plen: int, target: int) -> int:
+        """Worst-case pages a request can touch: the full generation
+        (prompt + its token budget) or the chunk-padded prefill tail,
+        whichever reaches further (padded positions must be writable even
+        though they are masked garbage)."""
+        reach = max(plen + target, self._padded(plen))
+        return pages_for(reach, self.page_size)
+
+    def _grow_to(self, i: int, n_tokens: int) -> None:
+        """Ensure slot i's table has pages covering positions [0, n_tokens)."""
+        s = self._slots[i]
+        while len(s.pages) * self.page_size < n_tokens:
+            if s.reserved <= 0:
+                raise RuntimeError("slot outgrew its admission reservation")
+            pg = self.alloc.take()
+            s.reserved -= 1
+            self._tables[i, len(s.pages)] = pg
+            s.pages.append(pg)
+            self._dirty = True
+
+    def _admit(self, i: int, rid: int, prompt: np.ndarray,
+               target: int) -> bool:
+        plen = len(prompt)
+        if plen + target > self.max_len:
+            raise ValueError(
+                f"request {rid}: prompt {plen} + max_new {target} "
+                f"exceeds max_len {self.max_len}")
+        need = self._need_pages(plen, target)
+        if not self.alloc.reserve(need):
+            return False
+        s = self._slots[i]
+        s.state, s.rid, s.plen, s.base = "prefill", rid, plen, 0
+        s.target = target
+        s.prompt = np.asarray(prompt, np.int32)
+        s.pages, s.reserved, s.toks, s.decode_steps = [], need, [], 0
+        self._tables[i, :] = 0
+        self._lengths[i] = 0
+        self._dirty = True
+        return True
+
+    def _finish(self, i: int, results: Dict[int, RequestResult]) -> None:
+        s = self._slots[i]
+        t = np.asarray(s.toks, np.int32)
+        results[s.rid] = RequestResult(s.rid, s.prompt, t, len(t),
+                                       decode_steps=s.decode_steps)
+        self.finish_times[s.rid] = time.time() - self._t0
+        self.alloc.release(s.pages, reserved_left=s.reserved)
+        self._tables[i, :] = 0
+        self._lengths[i] = 0
+        self._slots[i] = _Slot()
+        self._dirty = True
+
+    def _push_token(self, i: int, tok: int,
+                    results: Dict[int, RequestResult]) -> None:
+        """Record a sampled token; finish the slot on EOS / token budget."""
+        s = self._slots[i]
+        s.toks.append(tok)
+        s.last_tok = tok
+        done = (len(s.toks) >= s.target
+                or (self.gen.eos_id >= 0 and tok == self.gen.eos_id))
+        if done:
+            self._finish(i, results)
+
+    # ------------------------------------------------------------ #
+
+    def serve_queue(self, requests: Sequence[np.ndarray], *,
+                    max_new: Optional[Sequence[int]] = None
+                    ) -> List[RequestResult]:
+        """Continuously-batched serving of a request queue.
+
+        Admission is FIFO (head-of-line: a request too large for the
+        remaining pool blocks later ones, preserving queue order);
+        results come back ordered by request id.  ``max_new`` optionally
+        carries per-request token budgets (default: the engine-wide
+        ``gen.max_new_tokens``); a slot that reaches its budget or EOS is
+        refilled on the very next step — no wasted decode steps.
+        Per-request completion times land in ``self.finish_times``.
+        """
+        queue = list(enumerate(requests))
+        results: Dict[int, RequestResult] = {}
+        key = jax.random.PRNGKey(self.gen.seed)
+        step = jnp.zeros((), jnp.int32)     # rng step, advanced on device
+        self.finish_times: Dict[int, float] = {}
+        self._t0 = time.time()
+        # device-side steady state: uploaded only when host slot state
+        # changes (admit / finish / page growth / prefill completion);
+        # between events a decode step is ONE dispatch + one token
+        # readback, nothing else
+        self._dirty = True
+        toks_d = tables_d = lengths_d = active_d = None
+
+        while queue or any(s.state != "free" for s in self._slots):
+            # 1. admit newcomers into free slots (FIFO, pool-gated)
+            for i, s in enumerate(self._slots):
+                if not queue:
+                    break
+                if s.state == "free":
+                    rid, prompt = queue[0]
+                    target = (max_new[rid] if max_new is not None
+                              else self.gen.max_new_tokens)
+                    if not self._admit(i, rid, prompt, target):
+                        break           # head-of-line: wait for pages
+                    queue.pop(0)
+
+            # 2. one prefill chunk per admitting slot (residents keep
+            #    decoding between chunks — a long prompt never stalls them)
+            for i, s in enumerate(self._slots):
+                if s.state != "prefill":
+                    continue
+                self._grow_to(i, s.base + self.chunk)
+                padded = np.zeros((self.chunk,), np.int32)
+                span = s.prompt[s.base:s.base + self.chunk]
+                padded[:len(span)] = span
+                logits, self.pages = self._prefill_chunk(
+                    self.params, jnp.asarray(padded)[None], self.pages,
+                    jnp.asarray(self._tables[i:i + 1]),
+                    jnp.asarray(s.base, jnp.int32))
+                s.base += self.chunk
+                if s.base >= s.plen:    # prompt fully cached -> sample
+                    last = logits[0, s.plen - 1 - (s.base - self.chunk)]
+                    if self.gen.temperature <= 0.0:
+                        tok = int(jnp.argmax(last, -1))
+                    else:
+                        key, k = jax.random.split(key)
+                        tok = int(jax.random.categorical(
+                            k, last / self.gen.temperature))
+                    s.state = "decode"
+                    self._lengths[i] = s.plen
+                    self._dirty = True
+                    self._push_token(i, tok, results)
+
+            # 3. one decode step over every resident (fixed shapes: the
+            #    slot array never changes size, only the active mask)
+            active = [s.state == "decode" for s in self._slots]
+            if any(active):
+                for i in range(self.slots):
+                    if active[i]:       # page for the token being written
+                        self._grow_to(i, int(self._lengths[i]) + 1)
+                if self._dirty:         # slot population changed: upload
+                    toks_d = jnp.asarray(
+                        np.array([s.last_tok for s in self._slots],
+                                 np.int32))
+                    tables_d = jnp.asarray(self._tables)
+                    lengths_d = jnp.asarray(self._lengths)
+                    active_d = jnp.asarray(np.array(active))
+                    self._dirty = False
+                toks_d, self.pages, lengths_d, step = self._decode(
+                    self.params, toks_d, self.pages, tables_d, lengths_d,
+                    active_d, key, step)
+                nxt = np.asarray(toks_d)
+                for i in range(self.slots):
+                    if active[i]:
+                        self._lengths[i] += 1
+                        self._slots[i].decode_steps += 1
+                        self._push_token(i, int(nxt[i]), results)
+
+        return [results[rid] for rid in sorted(results)]

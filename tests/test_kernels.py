@@ -195,6 +195,128 @@ except ImportError:                                   # pragma: no cover
     pass
 
 
+# ------------------------- flash decode ------------------------------ #
+
+def _paged_case(key, b, hq, hkv, d, page, maxp, dtype=jnp.float32,
+                shuffle=True, max_len=None):
+    """Random paged-attention inputs with a scattered block table."""
+    ks = jax.random.split(key, 3)
+    n_pages = 1 + b * maxp
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k_pages = jax.random.normal(ks[1], (hkv, n_pages, page, d), dtype)
+    v_pages = jax.random.normal(ks[2], (hkv, n_pages, page, d), dtype)
+    ids = np.arange(1, n_pages)
+    if shuffle:   # physical pages deliberately out of sequence order
+        ids = np.random.default_rng(b * 7 + maxp).permutation(ids)
+    tables = jnp.asarray(ids.reshape(b, maxp).astype(np.int32))
+    hi = max_len or maxp * page
+    lengths = jnp.asarray(
+        np.random.default_rng(d).integers(1, hi + 1, size=b), jnp.int32)
+    return q, k_pages, v_pages, tables, lengths
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,page,maxp", [
+    (1, 1, 1, 64, 8, 2),
+    (2, 4, 2, 64, 8, 3),
+    pytest.param(3, 8, 8, 32, 16, 2, marks=_slow),     # MHA (g=1)
+    pytest.param(1, 6, 2, 128, 8, 4, marks=_slow),
+    (2, 8, 2, 32, 16, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_matches_ref(b, hq, hkv, d, page, maxp, dtype):
+    """Paged decode kernel (interpret) == XLA gather oracle, through a
+    shuffled block table and ragged per-sequence lengths."""
+    q, kp, vp, tbl, lens = _paged_case(jax.random.PRNGKey(0), b, hq, hkv,
+                                       d, page, maxp, dtype)
+    o_ref = ref.flash_decode_ref(q, kp, vp, tbl, lens)
+    o = ops.flash_decode(q, kp, vp, tbl, lens, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [1, 5, 16, 100])
+def test_flash_decode_window(window):
+    """Sliding-window masking incl. pages that short-circuit entirely
+    out of the window."""
+    q, kp, vp, tbl, lens = _paged_case(jax.random.PRNGKey(1), 2, 4, 2, 64,
+                                       8, 4)
+    o_ref = ref.flash_decode_ref(q, kp, vp, tbl, lens, window=window)
+    o = ops.flash_decode(q, kp, vp, tbl, lens, window=window,
+                         impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_decode_inactive_slots_zero():
+    """lengths == 0 (inactive serving slots) must output exact zeros in
+    both the oracle and the kernel — not NaNs from an empty softmax."""
+    q, kp, vp, tbl, lens = _paged_case(jax.random.PRNGKey(2), 3, 4, 2, 32,
+                                       8, 2)
+    lens = lens.at[1].set(0)
+    for impl in ("xla", "pallas_interpret"):
+        o = np.asarray(ops.flash_decode(q, kp, vp, tbl, lens, impl=impl))
+        assert np.isfinite(o).all()
+        np.testing.assert_array_equal(o[1], np.zeros_like(o[1]))
+
+
+def test_flash_decode_null_page_tail_ignored():
+    """Unallocated block-table tail entries point at the null page 0;
+    whatever garbage lives there must not leak into masked positions."""
+    q, kp, vp, tbl, lens = _paged_case(jax.random.PRNGKey(3), 2, 4, 2, 32,
+                                       8, 3, max_len=8)
+    # sequences fit in page 0 of their table; null out the tail entries
+    tbl0 = tbl.at[:, 1:].set(0)
+    kp = kp.at[:, 0].set(1e6)            # poison the null page
+    vp = vp.at[:, 0].set(-1e6)
+    o_ref = ref.flash_decode_ref(q, kp, vp, tbl0, lens)
+    o = ops.flash_decode(q, kp, vp, tbl0, lens, impl="pallas_interpret")
+    assert np.isfinite(np.asarray(o)).all()
+    assert np.abs(np.asarray(o)).max() < 1e3
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_decode_gather_pages_roundtrip():
+    """gather_pages (the oracle's dense materialization) inverts the
+    paged layout: writing token t of sequence b to page tbl[b, t//page]
+    offset t%page reads back at dense position t."""
+    b, hkv, d, page, maxp = 2, 2, 16, 4, 3
+    n_pages = 1 + b * maxp
+    pages = jnp.zeros((hkv, n_pages, page, d))
+    tbl = jnp.asarray(np.arange(1, n_pages).reshape(b, maxp).astype(np.int32))
+    val = jax.random.normal(jax.random.PRNGKey(4), (b, maxp * page, hkv, d))
+    for t in range(maxp * page):
+        pages = pages.at[:, tbl[:, t // page], t % page].set(
+            val[:, t].transpose(1, 0, 2))
+    dense = ref.gather_pages(pages, tbl)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(val))
+
+
+try:
+    from hypothesis import given, settings as hsettings
+    import hypothesis.strategies as _hst
+
+    @hsettings(deadline=None, max_examples=8)
+    @given(_hst.integers(1, 3), _hst.sampled_from([1, 2, 4]),
+           _hst.sampled_from([32, 64, 128]), _hst.sampled_from([8, 16]),
+           _hst.integers(1, 3), _hst.integers(0, 12))
+    def test_property_flash_decode(b, g, d, page, maxp, window):
+        """Hypothesis sweep over head_dim / page size / pages-per-seq /
+        GQA group / window against the oracle."""
+        hkv = 2
+        q, kp, vp, tbl, lens = _paged_case(
+            jax.random.PRNGKey(b * 131 + d + page), b, hkv * g, hkv, d,
+            page, maxp)
+        o_ref = ref.flash_decode_ref(q, kp, vp, tbl, lens, window=window)
+        o = ops.flash_decode(q, kp, vp, tbl, lens, window=window,
+                             impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+except ImportError:                                   # pragma: no cover
+    pass
+
+
 @pytest.mark.parametrize("b,s,h,d", [
     (1, 64, 1, 64),
     pytest.param(2, 128, 3, 64, marks=_slow),

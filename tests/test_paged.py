@@ -1,0 +1,297 @@
+"""Paged KV cache + continuous-batching engine.
+
+Fast tier: the block allocator's free/reuse invariants and the
+``cache_bytes`` accounting (including the encoder-decoder regression).
+Slow tier: paged-vs-dense greedy bit-parity across model families and the
+PagedServeEngine's refill / ordering / pool behaviour.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serve import (BlockAllocator, cache_bytes, page_bytes, pages_for,
+                         pool_pages)
+from repro.serve.kvcache import describe_cache
+
+
+# ===================================================================== #
+# accounting (fast tier)
+# ===================================================================== #
+
+def test_cache_bytes_counts_cross_attention_encdec():
+    """Regression: encoder-decoder archs hold a self-attention AND a
+    cross-attention K/V cache per decoder layer; ``cache_bytes`` computed
+    the doubled layer count but returned the single-stack size."""
+    cfg = get_config("seamless-m4t-large-v2")
+    assert cfg.is_encoder_decoder
+    esize = 2  # bf16
+    per = 2 * 128 * cfg.n_kv_heads * cfg.resolved_head_dim * esize
+    expected = 3 * (2 * cfg.n_layers) * per
+    assert cache_bytes(cfg, 3, 128) == expected
+    # exactly double the equivalent decoder-only stack
+    dec_only = dataclasses.replace(cfg, is_encoder_decoder=False)
+    assert cache_bytes(cfg, 3, 128) == 2 * cache_bytes(dec_only, 3, 128)
+    assert describe_cache(cfg, 3, 128)["bytes"] == expected
+
+
+def test_page_bytes_and_pool_sizing():
+    cfg = get_config("yi-34b").reduced()
+    assert page_bytes(cfg, 16) == cache_bytes(cfg, 1, 16)
+    assert pages_for(1, 16) == 1 and pages_for(16, 16) == 1
+    assert pages_for(17, 16) == 2
+    # slots mode: every slot can hold a full max_len sequence (+ null)
+    assert pool_pages(cfg, 16, slots=3, max_len=64) == 3 * 4 + 1
+    # budget mode: whatever the bytes buy
+    b = page_bytes(cfg, 16)
+    assert pool_pages(cfg, 16, budget_bytes=5 * b + b // 2) == 5 + 1
+
+
+def test_block_allocator_reserve_take_release():
+    a = BlockAllocator(6)                 # 5 usable pages + null
+    assert a.free_pages == 5 and a.unreserved_pages == 5
+    assert a.reserve(3)
+    assert not a.reserve(3)               # only 2 unreserved left
+    assert a.reserve(2)
+    p1, p2 = a.take(), a.take()
+    assert p1 != p2 and 0 < p1 < 6 and 0 < p2 < 6
+    assert a.free_pages == 3
+    a.release([p1, p2], reserved_left=3)  # finish early: 3 unused units
+    assert a.free_pages == 5 and a.unreserved_pages == 5
+    assert a.peak_in_use == 2
+
+
+def test_block_allocator_never_hands_out_null_page():
+    a = BlockAllocator(4)
+    assert a.reserve(3)
+    pages = [a.take() for _ in range(3)]
+    assert 0 not in pages and sorted(pages) == [1, 2, 3]
+
+
+def test_block_allocator_misuse_raises():
+    a = BlockAllocator(4)
+    with pytest.raises(RuntimeError, match="without a matching reserve"):
+        a.take()
+    assert a.reserve(2)
+    p = a.take()
+    with pytest.raises(ValueError, match="bad page id"):
+        a.release([0])
+    with pytest.raises(ValueError, match="bad page id"):
+        a.release([7])
+    a.release([p], reserved_left=1)
+    with pytest.raises(ValueError, match="double free"):
+        a.release([p])
+    with pytest.raises(ValueError, match="bad reservation release"):
+        a.release([], reserved_left=5)
+    with pytest.raises(ValueError, match=">= 2 pages"):
+        BlockAllocator(1)
+
+
+def test_block_allocator_reuse_is_immediate():
+    """Pages released by a finished sequence satisfy the very next
+    reservation — the free/reuse property continuous batching rides on."""
+    a = BlockAllocator(5)                 # 4 usable
+    assert a.reserve(4)
+    held = [a.take() for _ in range(4)]
+    assert not a.reserve(1)               # pool exhausted
+    a.release(held[:2])
+    assert a.reserve(2)                   # freed pages immediately usable
+    again = [a.take(), a.take()]
+    assert set(again) == set(held[:2])
+    a.release(again)
+    a.release(held[2:])
+    assert a.free_pages == 4
+
+
+# ===================================================================== #
+# paged-vs-dense parity + engine behaviour (slow tier: builds models)
+# ===================================================================== #
+
+_slow = pytest.mark.slow
+
+
+def _bundle(arch, **kw):
+    from repro.models import build
+    cfg = get_config(arch).reduced()
+    if cfg.uses_moe:
+        # expert-capacity dropping depends on the routing group, so a
+        # capacity-bound MoE routes chunked prefill differently from the
+        # full prompt; a dropless factor makes chunking invisible
+        # (models/moe.py) and parity exact
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    bundle = build(cfg, cache_dtype=jnp.float32, decode_impl="xla", **kw)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+@_slow
+@pytest.mark.parametrize("arch", [
+    "yi-34b",                  # dense GQA
+    "starcoder2-15b",          # sliding-window GQA
+    "qwen2-vl-2b",             # vlm backbone (M-RoPE)
+    "deepseek-v2-lite-16b",    # MLA latent + MoE + first_k_dense
+])
+def test_paged_greedy_matches_dense(arch):
+    """Chunked paged prefill + paged decode produce bit-identical greedy
+    tokens to the contiguous-cache path (fp32 cache)."""
+    cfg, bundle, params = _bundle(arch)
+    B, PLEN, NEW, PAGE, CHUNK = 2, 9, 5, 8, 4
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, PLEN), 0,
+                                 cfg.vocab_size)
+
+    logits, cache = bundle.prefill(params, {"tokens": prompts,
+                                            "max_len": 64})
+    toks = [np.asarray(jnp.argmax(logits, -1))]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(NEW - 1):
+        logits, cache = bundle.decode_step(params, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(np.asarray(tok))
+    dense = np.stack(toks, 1)
+
+    maxp = pages_for(PLEN + NEW + CHUNK, PAGE)
+    pages = bundle.init_paged_cache(1 + B * maxp, PAGE)
+    tables = jnp.asarray(
+        np.arange(1, 1 + B * maxp, dtype=np.int32).reshape(B, maxp))
+    padded = -(-PLEN // CHUNK) * CHUNK
+    ptoks = jnp.pad(prompts, ((0, 0), (0, padded - PLEN)))
+    last = None
+    for c0 in range(0, padded, CHUNK):
+        lg, pages = bundle.prefill_paged_chunk(
+            params, ptoks[:, c0:c0 + CHUNK], pages, tables,
+            jnp.asarray(c0, jnp.int32))
+        if c0 <= PLEN - 1 < c0 + CHUNK:
+            last = lg[:, PLEN - 1 - c0]
+    toks = [np.asarray(jnp.argmax(last, -1))]
+    tok = jnp.argmax(last, -1).astype(jnp.int32)
+    lengths = jnp.full((B,), PLEN, jnp.int32)
+    active = jnp.ones((B,), bool)
+    for _ in range(NEW - 1):
+        lg, pages = bundle.decode_step_paged(params, tok, pages, tables,
+                                             lengths, active)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        toks.append(np.asarray(tok))
+        lengths = lengths + 1
+    np.testing.assert_array_equal(dense, np.stack(toks, 1))
+
+
+@_slow
+def test_paged_engine_matches_dense_engine_greedy():
+    """Whole-engine parity: the paged engine's chunked prefill + masked
+    slot decode returns the same greedy tokens as the dense wave engine
+    (uniform prompt lengths, so wave padding is a no-op)."""
+    from repro.serve import GenerationConfig, PagedServeEngine, ServeEngine
+    cfg, bundle, params = _bundle("yi-34b")
+    gen = GenerationConfig(max_new_tokens=6, temperature=0.0)
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+            for _ in range(5)]
+    dense = ServeEngine(bundle, params, max_len=64, gen=gen)
+    paged = PagedServeEngine(bundle, params, slots=2, page_size=8,
+                             max_len=64, prefill_chunk=8,
+                             cache_dtype=jnp.float32, gen=gen)
+    dres = dense.serve_queue(reqs, slots=2)
+    pres = paged.serve_queue(reqs)
+    for d, p in zip(dres, pres):
+        assert d.request_id == p.request_id
+        np.testing.assert_array_equal(d.tokens, p.tokens)
+    # token-level refill never recompiles: one trace per program
+    assert paged.prefill_traces == 1 and paged.decode_traces == 1
+
+
+@_slow
+def test_paged_engine_queue_order_and_pool_reuse():
+    """More requests than slots, mixed prompt lengths and budgets: FIFO
+    admission keeps results ordered; every page returns to the pool."""
+    from repro.serve import GenerationConfig, PagedServeEngine
+    cfg, bundle, params = _bundle("yi-34b")
+    gen = GenerationConfig(max_new_tokens=8, temperature=0.7, seed=3)
+    rng = np.random.default_rng(1)
+    reqs = [rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+            for n in rng.integers(3, 20, size=7)]
+    budgets = [int(b) for b in rng.integers(1, 9, size=7)]
+    eng = PagedServeEngine(bundle, params, slots=3, page_size=8,
+                           max_len=64, prefill_chunk=8,
+                           cache_dtype=jnp.float32, gen=gen)
+    res = eng.serve_queue(reqs, max_new=budgets)
+    assert [r.request_id for r in res] == list(range(7))
+    for r, b in zip(res, budgets):
+        assert r.steps == len(r.tokens) == b
+        assert r.decode_steps == b - 1      # budget hit => zero waste
+    assert eng.alloc.free_pages == eng.alloc.n_pages - 1
+    assert eng.alloc.peak_in_use <= 3 * eng.max_pages_per_seq
+
+
+@_slow
+def test_paged_engine_tiny_pool_serializes_but_serves():
+    """A pool sized for exactly one sequence forces head-of-line
+    admission: the engine degrades to serial service, never deadlocks,
+    and still preserves order — the admission-reservation invariant."""
+    from repro.serve import GenerationConfig, PagedServeEngine
+    cfg, bundle, params = _bundle("yi-34b")
+    gen = GenerationConfig(max_new_tokens=4, temperature=0.0)
+    # each request needs 2 pages (padded prompt 16 toks / page 8);
+    # a 2-page budget admits exactly one at a time
+    budget = 2 * page_bytes(cfg, 8, cache_dtype=jnp.float32)
+    eng = PagedServeEngine(bundle, params, slots=3, page_size=8,
+                           max_len=24, prefill_chunk=8,
+                           budget_bytes=budget, cache_dtype=jnp.float32,
+                           gen=gen)
+    rng = np.random.default_rng(2)
+    reqs = [rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+            for _ in range(4)]
+    res = eng.serve_queue(reqs)
+    assert [r.request_id for r in res] == [0, 1, 2, 3]
+    assert all(r.steps == 4 for r in res)
+    assert eng.alloc.peak_in_use == 2      # strictly serial
+    assert eng.alloc.free_pages == eng.alloc.n_pages - 1
+
+
+@_slow
+def test_paged_engine_eos_frees_slot_early():
+    """EOS mid-stream trims the result AND stops spending decode steps on
+    the slot (the wasted-step claim)."""
+    from repro.serve import GenerationConfig, PagedServeEngine
+    cfg, bundle, params = _bundle("yi-34b")
+    rng = np.random.default_rng(3)
+    reqs = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+            for _ in range(2)]
+    probe = PagedServeEngine(
+        bundle, params, slots=2, page_size=8, max_len=64, prefill_chunk=8,
+        cache_dtype=jnp.float32,
+        gen=GenerationConfig(max_new_tokens=6, temperature=0.0))
+    full = probe.serve_queue(reqs)
+    eos = int(full[0].tokens[2])          # greedy => reproducible
+    eng = PagedServeEngine(
+        bundle, params, slots=2, page_size=8, max_len=64, prefill_chunk=8,
+        cache_dtype=jnp.float32,
+        gen=GenerationConfig(max_new_tokens=6, temperature=0.0,
+                             eos_id=eos))
+    res = eng.serve_queue(reqs)
+    r0 = res[0]
+    assert r0.tokens[-1] == eos
+    # trimmed at the FIRST eos occurrence (<= position 2), and the slot
+    # stopped spending decode steps right there
+    assert len(r0.tokens) <= 3
+    assert r0.decode_steps == len(r0.tokens) - 1
+    np.testing.assert_array_equal(r0.tokens,
+                                  full[0].tokens[:len(r0.tokens)])
+
+
+@_slow
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "hymba-1.5b",
+                                  "seamless-m4t-large-v2"])
+def test_paged_engine_rejects_stateful_families(arch):
+    """ssm / hybrid / encoder-decoder caches are not positional pages;
+    the paged engine refuses them with a pointer at ServeEngine."""
+    from repro.models import build
+    from repro.serve import PagedServeEngine
+    cfg = get_config(arch).reduced()
+    bundle = build(cfg)
+    assert bundle.decode_step_paged is None
+    with pytest.raises(ValueError, match="use ServeEngine"):
+        PagedServeEngine(bundle, None)     # raises before touching params

@@ -60,6 +60,59 @@ def test_serve_queue_slots():
         assert r.tokens.shape[0] == 4
 
 
+def test_serve_queue_pow2_bucketing_bounds_compiles():
+    """Mixed prompt lengths pad to power-of-two buckets, so the number of
+    compiled prefill programs is log-bounded — checked with the trace-time
+    compile counter, not timing."""
+    cfg, bundle, params, eng = _engine(max_new=3)
+    rng = np.random.default_rng(0)
+    mk = lambda n: rng.integers(0, cfg.vocab_size, size=n)  # noqa: E731
+    # lengths 5 and 7 share the 8-bucket; 13 lands in the 16-bucket
+    eng.serve_queue([mk(5)], slots=1)
+    assert eng.prefill_traces == 1
+    eng.serve_queue([mk(7)], slots=1)
+    assert eng.prefill_traces == 1          # same bucket: no retrace
+    eng.serve_queue([mk(13)], slots=1)
+    assert eng.prefill_traces == 2          # new bucket: one more
+    assert eng.decode_traces == 1           # decode never re-specializes
+
+
+def test_serve_queue_eos_trims_result():
+    cfg, bundle, params, eng = _engine(max_new=6)
+    rng = np.random.default_rng(1)
+    req = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    probe = eng.serve_queue([req], slots=1)
+    eos = int(probe[0].tokens[2])           # greedy => reproducible
+    cfg2, bundle2, params2, _ = cfg, bundle, params, None
+    eng2 = ServeEngine(bundle2, params2, max_len=64,
+                       gen=GenerationConfig(max_new_tokens=6,
+                                            temperature=0.0, eos_id=eos))
+    r = eng2.serve_queue([req], slots=1)[0]
+    assert r.tokens[-1] == eos
+    assert len(r.tokens) <= 3               # trimmed at first EOS
+    assert r.steps == len(r.tokens)
+    np.testing.assert_array_equal(r.tokens,
+                                  probe[0].tokens[:len(r.tokens)])
+
+
+def test_serve_queue_reports_wasted_decode_steps():
+    """The dense wave engine burns the full scan even when a request's
+    budget (or EOS) ends it early — RequestResult.decode_steps exposes
+    exactly that cost."""
+    cfg, bundle, params, eng = _engine(max_new=8)
+    rng = np.random.default_rng(2)
+    reqs = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+            for _ in range(2)]
+    res = eng.serve_queue(reqs, slots=2, max_new=[2, 8])
+    assert res[0].steps == len(res[0].tokens) == 2
+    assert res[1].steps == 8
+    # both requests rode the same 7-step wave scan
+    assert res[0].decode_steps == res[1].decode_steps == 7
+    wasted = (res[0].decode_steps - (res[0].steps - 1)) \
+        / res[0].decode_steps
+    assert wasted == pytest.approx(6 / 7)
+
+
 def test_cache_accounting():
     for arch, kind in [("rwkv6-1.6b", "ssm-state"),
                        ("hymba-1.5b", "hybrid(window+state)"),
