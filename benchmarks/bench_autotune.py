@@ -70,6 +70,7 @@ def run(smoke: bool = False) -> List[Row]:
         "name": "calibration",
         "fast_bw": m.fast_bw, "slow_bw": m.slow_bw,
         "latency": m.latency, "compress_bw": m.compress_bw,
+        "codec_bw": dict(m.codec_bw or ()),
         "fitted": list(cal.fitted), "n_samples": cal.n_samples,
         "median_rel_err": round(cal.median_rel_err, 4),
         "max_rel_err": round(cal.max_rel_err, 4),

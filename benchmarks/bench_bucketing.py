@@ -26,7 +26,20 @@ this module does the same standalone):
    ``topk:0.05:pipelined`` record carries ``speedup_vs_serial`` — the
    acceptance bar is >= 1.2x over the serial baseline at the same cap.
 
-3. **Sharded RS/AG A/B** (the fsdp>1 rows): the same global reduction
+3. **Codec-kernel A/B** (the codec rows): per codec family, the legacy
+   baseline vs the kernel/engine path this PR lands — ``powersgd:2``
+   per-leaf (two collectives per leaf, per-leaf QR) vs pipelined
+   matrix-bucketed (two collectives per four-leaf bucket, batched QR,
+   EF finalized inside the scan), and ``qint8:128:twopass`` per-leaf
+   (separate int8 + scale messages) vs the fused single-buffer pack
+   pipelined (ONE message per bucket).  Bucket cap ``AB_CODEC_CAP``
+   keeps 6 four-leaf buckets so the message-count collapse is visible
+   in the records (``messages``); the pipelined rows carry
+   ``speedup_vs_serial`` over their per-leaf baseline.  Alongside, the
+   ``kernels/*`` records pin Pallas-kernel (interpret mode on CPU) vs
+   XLA-oracle parity: ``max_abs_diff_vs_oracle`` per kernel.
+
+4. **Sharded RS/AG A/B** (the fsdp>1 rows): the same global reduction
    with every learner 2-way fsdp-sharded (4 learners x 2 shards = the
    same 8 host devices) vs the replicated baseline at the same learner
    topology.  The sharded rows record the collective op mix (zero bucket
@@ -125,6 +138,7 @@ def _hlo_collectives(reducer, init_fn) -> int:
 
 
 def _ab_measure(sched: str, cap: int, rounds: int, *,
+                spec: str = "topk:0.05",
                 sharded: bool = False, topo_shape=None) -> Dict:
     """One A/B variant, measured in THIS process (the child side of the
     subprocess-per-variant harness): build the shared reduction
@@ -138,7 +152,7 @@ def _ab_measure(sched: str, cap: int, rounds: int, *,
     import hashlib
     build = build_sharded_ab_reduction if sharded else build_ab_reduction
     kw = {"topo_shape": tuple(topo_shape)} if topo_shape else {}
-    b = build(sched, cap, **kw)
+    b = build(sched, cap, spec=spec, **kw)
     p_sh = jax.device_put(b["params"], b["shardings"][0])
     s_sh = jax.device_put(b["state"], b["shardings"][1])
 
@@ -165,6 +179,10 @@ def _ab_measure(sched: str, cap: int, rounds: int, *,
         "collectives": count_allreduce_ops(txt),
         "reduce_scatter": ops["reduce_scatter"],
         "all_gather": ops["all_gather"],
+        # analytic grouped-collective dispatch count — the quantity the
+        # fused qint8 pack (2 msgs -> 1 per bucket) and matrix bucketing
+        # (2 msgs per leaf -> per bucket) collapse
+        "messages": int(b["reducer"].n_messages(b["tree1"])),
         "n_buckets": b["n_buckets"],
         "compile_s": round(compile_s, 2),
         "warm_us": round(float(np.median(per_exec)) * 1e6, 1),
@@ -227,6 +245,120 @@ def _reduction_ab(rounds: int) -> List[Row]:
                           f"same_hlo={rec.get('same_hlo_as_serial')}"
                           if sched == "pipelined" else ""))
             rows.append((f"bucketing/red8/{name}", rec["us"], derived))
+    return rows
+
+
+# codec A/B bucket cap: 24 leaves x 24 KiB -> 4 leaves per bucket -> 6
+# buckets, so the per-bucket message bill is visibly below the per-leaf
+# one (powersgd 48 -> 12 msgs, fused qint8 48 -> 6) while the pipeline
+# still has stages to overlap
+AB_CODEC_CAP = 96 << 10
+
+
+def _codec_ab(rounds: int) -> List[Row]:
+    """Per-codec baseline-vs-kernel-path A/B (module docstring §3):
+    subprocess-per-variant like :func:`_reduction_ab`, the pipelined row
+    of each pair carries ``speedup_vs_serial`` over its per-leaf
+    baseline."""
+    import subprocess
+    import sys
+
+    rows: List[Row] = []
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+
+    pairs = (
+        # (row name, child variant, reducer spec); first of each pair is
+        # the baseline the second's speedup is measured against
+        (("powersgd:2:perleaf", "perleaf", "powersgd:2"),
+         ("powersgd:2:pipelined", "pipelined", "powersgd:2")),
+        (("qint8:128:twopass:perleaf", "perleaf", "qint8:128:twopass"),
+         ("qint8:128:pipelined", "pipelined", "qint8:128")),
+    )
+    for (base_name, base_var, base_spec), (name, var, spec) in pairs:
+        base_rec = None
+        for nm, v, sp in ((base_name, base_var, base_spec),
+                          (name, var, spec)):
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_bucketing",
+                 "--ab-variant", v, "--ab-cap", str(AB_CODEC_CAP),
+                 "--ab-spec", sp, "--rounds", str(rounds)],
+                env=env, cwd=repo, capture_output=True, text=True,
+                timeout=900)
+            if r.returncode != 0:
+                rows.append((f"bucketing/codec/{nm}", 0.0,
+                             "ERROR " + r.stderr.strip()[-200:]))
+                continue
+            rec = json.loads(r.stdout.strip().splitlines()[-1])
+            rec.pop("hlo_md5", None)
+            rec["name"] = nm
+            if v == "perleaf":
+                base_rec = rec
+            elif base_rec:
+                rec["speedup_vs_serial"] = round(
+                    base_rec["us"] / rec["us"], 2)
+                rec["baseline"] = base_name
+            RECORDS.append(rec)
+            derived = (f"n_buckets={rec['n_buckets']} "
+                       f"messages={rec['messages']} "
+                       f"hlo_all_reduces={rec['collectives']} "
+                       f"compile_s={rec['compile_s']:.2f}"
+                       + (f" speedup_vs_serial="
+                          f"{rec.get('speedup_vs_serial', 0):.2f}"
+                          if v == "pipelined" else ""))
+            rows.append((f"bucketing/codec/{nm}", rec["us"], derived))
+    return rows
+
+
+def _kernel_parity() -> List[Row]:
+    """Pallas codec-kernel vs XLA-oracle parity records (interpret mode
+    — the same kernel program a TPU would run, executed on CPU).  Pinned
+    in BENCH_reduction.json so CI catches kernel drift without TPU
+    hardware: batched QR compares projectors QQ^T (the kernel's CGS2
+    sign convention differs from LAPACK's), fused qint8 must match the
+    legacy two-pass quantizer bit-exactly under jit."""
+    from repro.comm.quant import dequantize_block, quantize_block
+    from repro.kernels import ops
+
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+
+    p = jax.random.normal(key, (8, 96, 4), dtype=jnp.float32)
+    proj = lambda q: jnp.einsum("bij,bkj->bik", q, q)  # noqa: E731
+    t0 = time.time()
+    q_k = ops.batched_qr(p, impl="pallas_interpret")
+    qr_us = (time.time() - t0) * 1e6
+    qr_diff = float(jnp.max(jnp.abs(
+        proj(q_k) - proj(ops.batched_qr(p, impl="xla")))))
+    rec = {"name": "kernels/batched_qr", "impl": "pallas_interpret",
+           "us": round(qr_us, 1), "shape": list(p.shape),
+           "max_abs_diff_vs_oracle": qr_diff}
+    RECORDS.append(rec)
+    rows.append(("bucketing/kernels/batched_qr", round(qr_us, 1),
+                 f"max_abs_diff_vs_oracle={qr_diff:.2e}"))
+
+    x = jax.random.normal(jax.random.fold_in(key, 1), (5, 1000),
+                          dtype=jnp.float32)
+    roundtrip = jax.jit(lambda x: ops.qint8_unpack(
+        ops.qint8_pack(x, 128, impl="pallas_interpret"), x.shape[1],
+        impl="pallas_interpret"))
+    legacy = jax.jit(lambda x: dequantize_block(
+        *quantize_block(x, 128), x.shape[1]))
+    t0 = time.time()
+    got = roundtrip(x)
+    q_us = (time.time() - t0) * 1e6
+    q_diff = float(jnp.max(jnp.abs(got - legacy(x))))
+    rec = {"name": "kernels/qint8_pack", "impl": "pallas_interpret",
+           "us": round(q_us, 1), "shape": list(x.shape), "block": 128,
+           "max_abs_diff_vs_oracle": q_diff}
+    RECORDS.append(rec)
+    rows.append(("bucketing/kernels/qint8_pack", round(q_us, 1),
+                 f"max_abs_diff_vs_oracle={q_diff:.2e}"))
     return rows
 
 
@@ -305,6 +437,8 @@ def run(smoke: bool = False) -> List[Row]:
         RECORDS.append({"name": name, "us": round(us, 1),
                         "payload_B": payload, "collectives": colls})
     rows.extend(_reduction_ab(rounds))
+    rows.extend(_codec_ab(rounds))
+    rows.extend(_kernel_parity())
     rows.extend(_sharded_ab(rounds))
     return rows
 
@@ -314,10 +448,14 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--ab-variant", choices=("serial", "pipelined"),
+    ap.add_argument("--ab-variant",
+                    choices=("serial", "pipelined", "perleaf"),
                     default=None, help="child mode: measure ONE "
                     "reduction-schedule variant and print a json record")
     ap.add_argument("--ab-cap", type=int, default=AB_SMALL_CAP)
+    ap.add_argument("--ab-spec", default="topk:0.05",
+                    help="child mode: reducer spec for the variant "
+                         "(the codec A/B passes powersgd/qint8 here)")
     ap.add_argument("--ab-sharded", action="store_true",
                     help="child mode: measure the fsdp=2 sharded variant "
                          "(reduce-scatter + all-gather buckets)")
@@ -330,7 +468,8 @@ if __name__ == "__main__":
         topo = tuple(int(x) for x in args.ab_topo.split(",")) \
             if args.ab_topo else None
         print(json.dumps(_ab_measure(args.ab_variant, args.ab_cap,
-                                     args.rounds, sharded=args.ab_sharded,
+                                     args.rounds, spec=args.ab_spec,
+                                     sharded=args.ab_sharded,
                                      topo_shape=topo)))
     else:
         for n, us, d in run(smoke=args.smoke):

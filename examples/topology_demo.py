@@ -19,6 +19,9 @@ if cal is not None:
     print(f"[calibrated comm model: fast_bw={cm.fast_bw:.3e} "
           f"slow_bw={cm.slow_bw:.3e} latency={cm.latency:.2e} "
           f"compress_bw={cm.compress_bw:.3e}]")
+    if cm.codec_bw:
+        print("[per-codec compress_bw: "
+              + " ".join(f"{c}={bw:.3e}" for c, bw in cm.codec_bw) + "]")
 for arch in ALL_ARCHS:
     cfg = get_config(arch)
     lay = cfg.layout
@@ -53,8 +56,8 @@ plan = apply_bucketing(ReductionPlan.parse(PLAN), DEFAULT_BUCKET_BYTES)
 print(f"\n3-level plan {plan.describe()} (2-pod view):\n")
 print(f"{'arch':26s} {'level':7s} {'period':>6s} {'n':>4s} "
       f"{'payload MB':>10s} {'compress':>8s} {'x/round':>7s} "
-      f"{'tier':>4s} {'msgs':>5s} {'ms/step':>8s} {'piped':>8s} "
-      f"{'overlap':>7s}")
+      f"{'tier':>4s} {'msgs':>5s} {'codec':>6s} {'cdc ms':>7s} "
+      f"{'ms/step':>8s} {'piped':>8s} {'overlap':>7s}")
 for arch in ALL_ARCHS:
     cfg = get_config(arch)
     lay = cfg.layout
@@ -68,6 +71,8 @@ for arch in ALL_ARCHS:
               f"{lc.participants:>4d} {lc.payload_bytes / 2**20:>10.1f} "
               f"{dense / max(lc.payload_bytes, 1):>7.1f}x "
               f"{lc.count_per_round:>7d} {tier:>4s} {lc.messages:>5d} "
+              f"{lc.codec or '-':>6s} "
+              f"{lc.compute_s / plan.total_period * 1e3:>7.3f} "
               f"{lc.seconds_per_round / plan.total_period * 1e3:>8.3f} "
               f"{lc.overlap_s / plan.total_period * 1e3:>8.3f} "
               f"{lc.overlap_speedup:>6.2f}x")
@@ -75,7 +80,11 @@ for arch in ALL_ARCHS:
 print("""
 Each level is costed over its own link tier (local/pod ride ICI, global
 crosses DCI) and its own compressed payload (cast halves the words, topk
-5% transmits value+index pairs for 5% of coordinates).  'piped' is the
+5% transmits value+index pairs for 5% of coordinates).  'codec'/'cdc ms'
+are the level's codec family and its compress+reconstruct compute per
+step, priced at CommModel.compress_bw_for(codec) — the per-codec rate
+when a calibration artifact fitted one from codec-labeled probe points,
+else the shared compress_bw constant.  'piped' is the
 wall ms/step of the pipelined bucket schedule (comm/bucket.py Pipelined):
 each bucket's collective overlaps the next bucket's compress, so a level
 pays max(compute, comm) per stage plus the fill/drain ramp instead of the

@@ -13,10 +13,22 @@ D the dense (uncompressed) bytes — exactly
 ``CommModel.allreduce_time(V, n, bw) + (m-1)·2(n-1)·latency +
 D/compress_bw``, the same bill ``theory.level_reduction_seconds`` puts
 on a serial level.  :func:`fit_comm_model` solves the non-negative
-least-squares problem exactly (4 columns -> best feasible column
-subset); parameters whose feature column is all-zero (e.g. no DCI
-samples in a smoke grid) or that the fit zeroes out keep the base
-model's value and are excluded from ``Calibration.fitted``.
+least-squares problem exactly (best feasible column subset); parameters
+whose feature column is all-zero (e.g. no DCI samples in a smoke grid)
+or that the fit zeroes out keep the base model's value and are excluded
+from ``Calibration.fitted``.
+
+Per-codec compute: samples stamped with a non-empty ``codec`` label
+(``Reducer.codec_name``, recorded by probe.py) move their dense-bytes
+support out of the shared ``compress_bw`` column into one column per
+codec family — topk's select+scatter, qint8's fused quantize+pack and
+powersgd's einsum+QR run at very different bytes/s, and a single shared
+rate mis-prices whichever codecs weren't probed.  Fitted rates land in
+``CommModel.codec_bw`` (reported as ``compress_bw[<codec>]`` in
+``fitted``); unlabeled codec samples keep fitting the shared constant,
+and ``CommModel.compress_bw_for`` falls back to it for any codec the
+fit didn't see — so old probe artifacts and codec-free grids behave
+exactly as before.
 
 The result serializes to a JSON **calibration artifact** that
 ``bench_comm`` / ``launch/analytic.py`` / ``examples/topology_demo.py``
@@ -69,9 +81,14 @@ class Calibration:
     source: str = ""
 
     def save(self, path: str) -> None:
+        cm = dataclasses.asdict(self.model)
+        if not cm.get("codec_bw"):
+            # keep the artifact's documented key set stable when no
+            # per-codec rate was fitted
+            cm.pop("codec_bw", None)
         with open(path, "w") as f:
             json.dump({
-                "comm_model": dataclasses.asdict(self.model),
+                "comm_model": cm,
                 "fitted": list(self.fitted),
                 "diagnostics": {
                     "n_samples": self.n_samples,
@@ -115,12 +132,22 @@ def sample_features(s: Dict) -> np.ndarray:
     ])
 
 
+def _codec_label(s: Dict) -> str:
+    """Codec family of a sample ("" when unlabeled or codec-free): the
+    per-codec fit groups dense-bytes support by this label."""
+    if not s.get("has_codec", True):
+        return ""
+    return str(s.get("codec") or "")
+
+
 def predict_seconds(model: CommModel, s: Dict) -> float:
     """The model's prediction for one probe sample — shared by the fit
     diagnostics and the round-trip acceptance test, and identical in
-    form to ``theory.level_reduction_seconds`` on the serial schedule."""
+    form to ``theory.level_reduction_seconds`` on the serial schedule
+    (including its per-codec ``compress_bw_for`` pricing)."""
     theta = np.array([1.0 / model.fast_bw, 1.0 / model.slow_bw,
-                      model.latency, 1.0 / model.compress_bw])
+                      model.latency,
+                      1.0 / model.compress_bw_for(_codec_label(s))])
     return float(sample_features(s) @ theta)
 
 
@@ -159,20 +186,38 @@ def fit_comm_model(samples: Sequence[Dict], *,
     base = base or CommModel()
     A = np.stack([sample_features(s) for s in samples])
     b = np.array([s[time_field] * 1e-6 for s in samples])
+    # per-codec columns: codec-labeled samples carry their dense-bytes
+    # support in a column of their own; the shared compress_bw column
+    # keeps only the unlabeled codec samples
+    labels = np.array([_codec_label(s) for s in samples])
+    codecs = sorted({c for c in labels if c})
+    dense = A[:, 3].copy()
+    A[:, 3] = np.where(labels == "", dense, 0.0)
+    if codecs:
+        A = np.concatenate(
+            [A] + [np.where(labels == c, dense, 0.0)[:, None]
+                   for c in codecs], axis=1)
+    names = list(PARAMS) + [f"compress_bw[{c}]" for c in codecs]
     identifiable = np.abs(A).sum(axis=0) > 0
     theta = np.zeros(A.shape[1])
     theta[identifiable] = _nnls(A[:, identifiable], b)
 
     vals = {}
+    codec_bw = []
     fitted = []
-    for i, name in enumerate(PARAMS):
+    for i, name in enumerate(names):
         coef = theta[i]
         if not identifiable[i] or coef <= 0:
-            vals[name] = getattr(base, name)
-            continue
-        vals[name] = coef if name == "latency" else 1.0 / coef
+            if i < len(PARAMS):
+                vals[name] = getattr(base, name)
+            continue            # unfitted codec: compress_bw_for falls
+            # back to the shared constant
+        if i >= len(PARAMS):
+            codec_bw.append((codecs[i - len(PARAMS)], 1.0 / coef))
+        else:
+            vals[name] = coef if name == "latency" else 1.0 / coef
         fitted.append(name)
-    model = CommModel(**vals)
+    model = CommModel(**vals, codec_bw=tuple(codec_bw) or None)
 
     rel = []
     for s in samples:

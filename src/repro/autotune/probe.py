@@ -110,6 +110,12 @@ def default_grid(smoke: bool = False) -> List[ProbePoint]:
         ProbePoint("global", ici, "cast:bfloat16", 8, (160, 160)),
         ProbePoint("global", ici, "topk:0.05", 8, (64, 64)),
         ProbePoint("global", dci, "topk:0.05", 8, (96, 96)),
+        # per-codec compute rates at the matched 160x160 payload: the
+        # fused qint8 pack and the powersgd batched QR run very
+        # different arithmetic per dense byte, so calibrate.py fits
+        # each family its own compress_bw column from these labels
+        ProbePoint("global", ici, "qint8:128", 8, (160, 160)),
+        ProbePoint("global", ici, "powersgd:2", 8, (160, 160)),
         # a second multi-bucket latency point
         ProbePoint("global", dci, "mean", 8, (64, 64), PROBE_CAP_SMALL),
     ]
@@ -164,6 +170,11 @@ def measure_point(point: ProbePoint, reps: int = 12) -> Dict:
         "wire_bytes": int(red.wire_payload_bytes(tree1)),
         "messages": int(red.n_messages(tree1)),
         "has_codec": bool(getattr(red, "has_codec", True)),
+        # codec family label ("" for the identity mean): calibrate.py
+        # fits a per-codec compress_bw column from samples sharing a
+        # label, so qint8 pack and powersgd QR stop being billed at the
+        # same rate as topk thresholding
+        "codec": str(getattr(red, "codec_name", "")),
         "reps": reps,
         "compile_s": round(compile_s, 3),
         "warm_us": round(float(np.median(per_exec)) * 1e6, 1),

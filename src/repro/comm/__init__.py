@@ -7,7 +7,9 @@ Pick a reducer by spec string (``HierAvgParams.reducer`` / ``--reducer``):
                           (replaces the removed ``avg_dtype`` knob)
     "topk[:ratio]"        magnitude top-k of the delta, error feedback
     "randk[:ratio]"       shared-support random-k, error feedback
-    "qint8[:block]"       per-block int8 scale quantization
+    "qint8[:block]"       per-block int8 scale quantization (fused
+                          single-buffer pack; ``:twopass`` pins the
+                          legacy two-message quantize path)
     "powersgd[:rank]"     PowerSGD low-rank factors, EF + warm-started Q
 
 e.g. ``get_reducer("topk:0.05")`` transmits 5% of coordinates.
@@ -78,9 +80,14 @@ def get_reducer(spec, **kw) -> Reducer:
     elif name == "randk":
         red = RandKReducer(float(arg or 0.1), **kw)
     elif name == "qint8":
-        red = QInt8Reducer(int(arg or 256))
+        # "qint8[:block][:twopass]" — ":twopass" pins the legacy
+        # two-message quantize path (the fused-pack A/B baseline)
+        if arg == "twopass" or arg.endswith(":twopass"):
+            kw.setdefault("fused", False)
+            arg = arg[:-len("twopass")].rstrip(":")
+        red = QInt8Reducer(int(arg or 256), **kw)
     elif name == "powersgd":
-        red = PowerSGDReducer(int(arg or 2))
+        red = PowerSGDReducer(int(arg or 2), **kw)
     else:
         raise ValueError(
             f"unknown reducer spec {spec!r}; known: {REDUCER_NAMES} "

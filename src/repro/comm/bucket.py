@@ -169,7 +169,15 @@ class BucketLayout:
         schedule a ``lax.scan`` can iterate (the pipelined engine's
         requirement); single-bucket groups keep their exact size, so
         uniform and ragged layouts agree whenever there is nothing to
-        scan over.
+        scan over.  Matrix-mode groups pad to the group's largest
+        ``(a, b)`` panel elementwise — every bucket of the group becomes
+        the same near-square matrix, which is what lets PowerSGD's
+        buckets join the scan (the padded tail is zero, which low-rank
+        factorization preserves exactly at convergence of the zero
+        block, and unpack strips it).  NOTE a uniform matrix layout
+        therefore reshapes bucket data to a *different* (a, b) than the
+        ragged serial layout does — same-schedule comparisons must use
+        the same layout (see tests/test_bucket.py).
 
         ``shards`` — the :class:`~repro.parallel.sharding.ShardPlan` of
         an ``fsdp > 1`` ``ParallelLayout`` — makes the layout
@@ -183,10 +191,6 @@ class BucketLayout:
         (low-rank) reducers cannot act on a per-shard run, so matrix +
         sharded leaves still refuses.
         """
-        if matrix and uniform:
-            raise ValueError(
-                "uniform (pipelined) layouts are flat-only; matrix-mode "
-                "reducers (PowerSGD) run the serial bucket schedule")
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
         F = shards.size if shards is not None else 1
         n_lead = shards.n_lead if shards is not None else 1
@@ -247,11 +251,23 @@ class BucketLayout:
             flush()
             if uniform and len(buckets) - group_start > 1:
                 group = buckets[group_start:]
-                pad_n = max(b.shape[-1] for b in group)
-                buckets[group_start:] = [
-                    BucketSpec(b.dtype, b.size, b.shape[:-1] + (pad_n,),
-                               b.slots, b.shards)
-                    for b in group]
+                if matrix:
+                    # common near-square panel: elementwise max over the
+                    # group's (a, b) shapes, so every bucket reshapes to
+                    # the same matrix and the scan is rectangular
+                    pad_shape: Tuple[int, ...] = tuple(
+                        max(b.shape[d] for b in group)
+                        for d in range(len(group[0].shape)))
+                    buckets[group_start:] = [
+                        BucketSpec(b.dtype, b.size, pad_shape,
+                                   b.slots, b.shards)
+                        for b in group]
+                else:
+                    pad_n = max(b.shape[-1] for b in group)
+                    buckets[group_start:] = [
+                        BucketSpec(b.dtype, b.size, b.shape[:-1] + (pad_n,),
+                                   b.slots, b.shards)
+                        for b in group]
         return cls(treedef, lead_axes, tuple(buckets), shards)
 
     # ------------------------------------------------------------------ #
@@ -471,6 +487,12 @@ class Bucketed(Reducer):
     def has_codec(self) -> bool:
         return self.inner.has_codec
 
+    @property
+    def codec_name(self) -> str:
+        # per-codec compute pricing keys on the wrapped codec, not the
+        # engine ("bucketed"/"pipelined" are schedules, not codecs)
+        return self.inner.codec_name
+
     # -- layout ---------------------------------------------------------- #
 
     def layout_for(self, tree, lead_axes: int = N_LEARNER_AXES
@@ -577,9 +599,13 @@ class Bucketed(Reducer):
         return int(total)
 
     def n_messages(self, tree) -> int:
-        """Grouped collectives per reduction: one per bucket, not per
-        leaf."""
-        return self.layout_for(tree, lead_axes=0).n_buckets
+        """Grouped collectives per reduction: what the inner codec
+        dispatches per *bucket* rather than per leaf — one for
+        single-buffer codecs, two per bucket for the two-pass qint8
+        (payload + scale arrays ride separately) and per compressible
+        bucket for PowerSGD (the P^ and Q' factors)."""
+        lay = self.layout_for(tree, lead_axes=0)
+        return self.inner.n_messages(lay.bucket_structs())
 
     def _describe(self) -> str:
         return f"{self.inner.describe()}:bucketed"
@@ -614,20 +640,25 @@ class Pipelined(Bucketed):
     never selected, but k = ratio * padded size, so k can differ by a
     few coordinates from the ragged serial layout); ``randk`` draws its
     per-bucket support from a per-stage folded key (a different — equally
-    fresh — stream than the serial path).  Reducers whose carried state
-    cannot be split per bucket (``split_bucket_states`` -> None, e.g.
-    PowerSGD's warm-started Q) and single-bucket layouts fall back to the
-    serial schedule inside ``reduce`` — same math, nothing to overlap.
+    fresh — stream than the serial path); ``powersgd`` factorizes the
+    group's common near-square panel (a different matrix reshape than the
+    ragged serial layout — same-layout schedules are bit-identical,
+    test-enforced).  Stateful codecs run their ``finalize`` — dtype
+    restoration AND the EF/ref update — *inside* the scan, one stage
+    behind the collective, so no post-loop pass re-materializes refs;
+    the serial-schedule composition on the same layout is bit-identical.
+    Reducers whose carried state cannot be split per bucket
+    (``split_bucket_states`` -> None, e.g. per-leaf state handed to the
+    bucket engine) and single-bucket layouts fall back to the serial
+    schedule inside ``reduce`` — same math, nothing to overlap.
     """
 
     name = "pipelined"
     overlaps = True            # theory.plan_comm_per_round costing hint
-
-    @property
-    def uniform_layout(self) -> bool:
-        # matrix-mode (PowerSGD) buckets stay ragged: they cannot scan
-        # (and fall back to the serial schedule below anyway)
-        return not getattr(self.inner, "wants_matrix", False)
+    # every group pads to a rectangular schedule — flat runs to the max
+    # run length, matrix (PowerSGD) groups to the common (max a, max b)
+    # panel — so all codecs scan
+    uniform_layout = True
 
     # -- per-bucket stage ------------------------------------------------ #
 
@@ -673,7 +704,7 @@ class Pipelined(Bucketed):
             return gavg
 
         outs: List[Any] = [None] * n
-        new_sts: List[Any] = list(sts)
+        fin_sts: List[Any] = list(sts)
         # scan needs rectangular xs: pipeline each (dtype, shape, shards)
         # run of the uniform layout (sharded and flat buckets never mix —
         # their ranks and specs differ); a run of one has no neighbor to
@@ -686,49 +717,63 @@ class Pipelined(Bucketed):
             if len(idxs) == 1:
                 i = idxs[0]
                 xhat, st2 = self._stage(buckets[i], sts[i])
-                outs[i] = bucket_avg(i)(xhat)
-                new_sts[i] = st2
+                outb, st_f = self.inner.finalize(
+                    [bucket_avg(i)(xhat)], [buckets[i]], st2)
+                outs[i] = outb[0]
+                fin_sts[i] = st_f
             else:
-                self._pipeline(idxs, buckets, sts, outs, new_sts,
+                self._pipeline(idxs, buckets, sts, outs, fin_sts,
                                bucket_avg(idxs[0]))
 
-        new_state = (self.inner.join_bucket_states(state, new_sts)
+        # every bucket is already finalized (dtype restored, EF refs
+        # updated) by its own stage — no post-loop finalize pass
+        new_state = (self.inner.join_bucket_states(state, fin_sts)
                      if self.stateful else state)
-        out_buckets, new_state = self.inner.finalize(outs, buckets,
-                                                     new_state)
-        return lay.unpack(lay.wire_view(out_buckets)), new_state
+        return lay.unpack(lay.wire_view(outs)), new_state
 
-    def _pipeline(self, idxs, buckets, sts, outs, new_sts, gavg):
+    def _pipeline(self, idxs, buckets, sts, outs, fin_sts, gavg):
         """Double-buffered scan over one uniform bucket run: iteration
         *j* issues the collective for stage *j-1*'s reconstruction (the
-        carry) and then compresses bucket *j* — so the collective never
-        waits on this iteration's compute, and vice versa."""
+        carry), finalizes that stage in-scan (dtype restoration + EF/ref
+        update, one stage behind the collective), and then compresses
+        bucket *j* — so the collective never waits on this iteration's
+        compute, and vice versa."""
         stateful = self.stateful
         # prologue: fill the pipeline with stage 0's compress
         xhat0, st0 = self._stage(buckets[idxs[0]], sts[idxs[0]])
-        new_sts[idxs[0]] = st0
         xs = jnp.stack([buckets[i] for i in idxs[1:]])
         if stateful:
             st_xs = jax.tree.map(lambda *ls: jnp.stack(ls),
                                  *[sts[i] for i in idxs[1:]])
 
         def body(carry, x):
+            xh_p, st_p = carry
             # collective for the carried stage FIRST — it depends only on
             # the carry, so stage j's compress below is free to overlap it
-            out_prev = gavg(carry)
+            out_p = gavg(xh_p)
             b, st = x if stateful else (x, ())
+            # finalize the carried stage with bucket j standing in as the
+            # shape/dtype template — legal because the run is uniform and
+            # finalize's contract is template-only (comm/reducer.py)
+            outb, st_f = self.inner.finalize([out_p], [b], st_p)
             xhat, st2 = self._stage(b, st)
-            return xhat, (out_prev, st2)
+            return (xhat, st2), (outb[0], st_f)
 
         xs_all = (xs, st_xs) if stateful else xs
-        last, (outs_rest, st_rest) = jax.lax.scan(body, xhat0, xs_all)
-        # epilogue: drain the pipeline — the final stage's collective
-        outs[idxs[-1]] = gavg(last)
+        (xh_l, st_l), (outs_rest, st_rest) = jax.lax.scan(
+            body, (xhat0, st0), xs_all)
+        # epilogue: drain the pipeline — the final stage's collective and
+        # finalize
+        outb_l, st_fl = self.inner.finalize(
+            [gavg(xh_l)], [buckets[idxs[-1]]], st_l)
+        outs[idxs[-1]] = outb_l[0]
+        fin_sts[idxs[-1]] = st_fl
+        # ys entry j is stage idxs[j] (the stage carried INTO iteration
+        # j), already finalized
         for j, i in enumerate(idxs[:-1]):
             outs[i] = jax.tree.map(lambda l, j=j: l[j], outs_rest)
-        if stateful:
-            for j, i in enumerate(idxs[1:]):
-                new_sts[i] = jax.tree.map(lambda l, j=j: l[j], st_rest)
+            if stateful:
+                fin_sts[i] = jax.tree.map(lambda l, j=j: l[j], st_rest)
 
     def _describe(self) -> str:
         # only an explicit ':pipelined' pin round-trips as one: auto

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.reducer import N_LEARNER_AXES, Reducer, learner_shape
+from repro.kernels import ops
 
 
 class LowRankState(NamedTuple):
@@ -56,10 +57,16 @@ def _matrix_dims(shape) -> tuple:
     return a, b
 
 
-def _orthonormalize(p):
-    """Batched QR over the leading (learner) dim: [rows, a, r] -> Q factor."""
-    q, _ = jnp.linalg.qr(p)
-    return q
+def _orthonormalize(p, impl: str = "auto"):
+    """Batched QR over the leading (learner) dim: [rows, a, r] -> Q factor.
+
+    Dispatches through ``kernels/ops.py::batched_qr``: the CGS2 Pallas
+    kernel (kernels/batched_qr.py, one program per learner row) on a TPU
+    backend, the LAPACK/Householder ``jnp.linalg.qr`` oracle elsewhere.
+    The two differ only in per-column signs, which cancel in the
+    ``P^ Q'^T`` reconstruction.
+    """
+    return ops.batched_qr(p, impl=impl)
 
 
 class PowerSGDReducer(Reducer):
@@ -75,10 +82,13 @@ class PowerSGDReducer(Reducer):
     bucket_by_default = False
     wants_matrix = True
 
-    def __init__(self, rank: int = 2):
+    def __init__(self, rank: int = 2, impl: str = "auto"):
         if rank < 1:
             raise ValueError(f"powersgd rank must be >= 1, got {rank}")
         self.rank = int(rank)
+        # QR kernel dispatch (kernels/ops.py): "auto" | "xla" | "pallas"
+        # | "pallas_interpret"
+        self.impl = impl
 
     def _compressible(self, leaf) -> bool:
         s = learner_shape(leaf)
@@ -122,7 +132,8 @@ class PowerSGDReducer(Reducer):
             rows = _rows(x)
             a, b = _matrix_dims(learner_shape(x))
             m = delta.reshape(rows, a, b)
-            p_hat = _orthonormalize(m @ q.reshape(rows, b, self.rank))
+            p_hat = _orthonormalize(m @ q.reshape(rows, b, self.rank),
+                                    impl=self.impl)
             q_new = jnp.einsum("nab,nar->nbr", m, p_hat)
             approx = jnp.einsum("nar,nbr->nab", p_hat, q_new)
             payload.append((p_hat, q_new))
@@ -153,6 +164,43 @@ class PowerSGDReducer(Reducer):
         # buffer under donation (see comm/sparse.py finalize)
         ref = jax.tree.map(jnp.copy, out)
         return out, state._replace(ref=ref)
+
+    def split_bucket_states(self, state: LowRankState, n_buckets: int):
+        """Per-bucket states for the pipelined scan (comm/bucket.py).
+
+        In the bucket engine ``init_state`` saw the list of packed
+        buckets, so ref/err/q are parallel lists — one entry per bucket
+        (q is ``()`` for a non-compressible bucket shape).  Anything
+        else (per-leaf state, stale layout) returns None -> serial
+        fallback.
+        """
+        refs, errs, qs = state.ref, state.err, state.q
+        if not (isinstance(refs, list) and isinstance(errs, list)
+                and isinstance(qs, list) and len(refs) == n_buckets
+                and len(errs) == n_buckets and len(qs) == n_buckets):
+            return None
+        return [LowRankState(ref=[refs[i]], err=[errs[i]], q=[qs[i]])
+                for i in range(n_buckets)]
+
+    def join_bucket_states(self, state: LowRankState,
+                           states) -> LowRankState:
+        """Inverse of :meth:`split_bucket_states` after per-bucket
+        compress+finalize ran inside the scan."""
+        return LowRankState(ref=[s.ref[0] for s in states],
+                            err=[s.err[0] for s in states],
+                            q=[s.q[0] for s in states])
+
+    def n_messages(self, tree) -> int:
+        """Two collectives per compressible leaf (the P^ and Q'
+        factors), one for each dense-fallback leaf."""
+        total = 0
+        for leaf in jax.tree.leaves(tree):
+            s = tuple(leaf.shape)
+            if len(s) >= 2 and min(_matrix_dims(s)) > self.rank:
+                total += 2
+            else:
+                total += 1
+        return int(total)
 
     def payload_bytes(self, tree) -> int:
         total = 0

@@ -85,6 +85,16 @@ class Reducer:
     # low-rank codec needs to act on a bucket at all)
     wants_matrix = False
 
+    @property
+    def codec_name(self) -> str:
+        """Codec family label for per-codec compute pricing: the key the
+        cost model looks up in ``CommModel.codec_bw`` (calibrated by
+        ``autotune/calibrate.py`` from codec-labeled probe points) and
+        the value the probe stamps on each sample.  The spec-name for
+        codec reducers, "" for the identity mean (no codec compute to
+        bill)."""
+        return self.name if self.has_codec else ""
+
     # -- carried state -------------------------------------------------- #
     def init_state(self, params) -> Any:
         return ()
@@ -97,7 +107,8 @@ class Reducer:
         whose state is per-bucket (the sparse EF pair) override this
         together with :meth:`join_bucket_states`.  Returning ``None``
         means the state cannot be split — the pipelined engine falls
-        back to the serial schedule (e.g. PowerSGD's warm-started Q).
+        back to the serial schedule (e.g. per-leaf state handed to the
+        bucket engine, or a state built against a stale layout).
         """
         if self.stateful:
             return None
@@ -119,7 +130,16 @@ class Reducer:
         return payload
 
     def finalize(self, avg_tree, orig_tree, state) -> Tuple[Any, Any]:
-        """Post-reduction hook: restore dtypes / update EF references."""
+        """Post-reduction hook: restore dtypes / update EF references.
+
+        Contract: implementations consume ``orig_tree`` only as a
+        shape/dtype template (EF references update from ``avg_tree``,
+        never from ``orig_tree``'s values).  The pipelined bucket engine
+        relies on this to finalize each stage inside the scan with the
+        *current* iteration's bucket standing in as the template for the
+        carried stage — legal because a scan group is shape/dtype
+        uniform.
+        """
         return avg_tree, state
 
     # -- accounting ----------------------------------------------------- #

@@ -149,12 +149,40 @@ class CommModel:
     an effective bytes/s over the *uncompressed* bucket (the codec is a
     few HBM-bound VPU passes: delta + select + scatter ≈ 5 passes of the
     819 GB/s v5e HBM, rounded down) — what the pipelined schedule
-    overlaps against the wire time (see :func:`plan_comm_per_round`)."""
+    overlaps against the wire time (see :func:`plan_comm_per_round`).
+
+    ``codec_bw`` refines that single constant per codec family: a tuple
+    of ``(codec_name, bytes/s)`` pairs (tuple-of-pairs so the model stays
+    hashable/frozen) keyed by ``Reducer.codec_name`` — top-k's
+    select+scatter, qint8's fused quantize+pack and PowerSGD's
+    einsum+QR chains run at very different rates, and the calibration
+    fit (autotune/calibrate.py) can observe each from codec-labeled
+    probe points.  ``compress_bw_for`` falls back to the shared
+    ``compress_bw`` for codecs without a fitted entry, so an uncalibrated
+    model bills exactly as before."""
 
     fast_bw: float = 50.0e9          # intra-pod per-link (ICI)
     slow_bw: float = 2.5e9           # cross-pod effective per-chip (DCI)
     latency: float = 5.0e-6
     compress_bw: float = 150.0e9     # codec compute, bytes/s uncompressed
+    codec_bw: Optional[Tuple[Tuple[str, float], ...]] = None
+
+    def __post_init__(self):
+        if self.codec_bw is not None:
+            # normalize JSON-loaded lists-of-lists into the hashable
+            # tuple-of-pairs form
+            object.__setattr__(self, "codec_bw", tuple(
+                (str(k), float(v)) for k, v in self.codec_bw))
+
+    def compress_bw_for(self, codec: Optional[str]) -> float:
+        """Codec-compute rate for a ``Reducer.codec_name`` label —
+        the per-codec calibrated rate when one was fitted, else the
+        shared ``compress_bw`` constant."""
+        if codec and self.codec_bw:
+            for name, bw in self.codec_bw:
+                if name == codec:
+                    return bw
+        return self.compress_bw
 
     def allreduce_time(self, bytes_: float, n: int, bw: float) -> float:
         if n <= 1:
@@ -201,6 +229,9 @@ class LevelCost:
                              # only each device's shard slice (0 means
                              # "same as payload_bytes")
     compute_s: float = 0.0   # codec compute per round (compress+rebuild)
+    codec: str = ""          # Reducer.codec_name — which codec_bw entry
+                             # priced compute_s ("" = no codec / shared
+                             # compress_bw constant)
     overlap_s: float = 0.0   # wall seconds per round incl compute on the
                              # level's actual schedule: pipelined levels
                              # pay max(compute, comm) per bucket stage plus
@@ -264,7 +295,9 @@ def level_reduction_seconds(lvl, topo, template,
     # applies verbatim with the per-device wire bytes
     comm_s = cm.allreduce_time(wire, n, bw) \
         + (messages - 1) * 2 * (n - 1) * cm.latency
-    stage_compute = (dense_bytes / messages / cm.compress_bw
+    stage_compute = (dense_bytes / messages
+                     / cm.compress_bw_for(getattr(lvl.reducer,
+                                                  "codec_name", None))
                      if getattr(lvl.reducer, "has_codec", True) else 0.0)
     compute_s = messages * stage_compute
     wall_s = scheduled_wall(stage_compute, comm_s / messages, messages,
@@ -339,6 +372,7 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
         out.append(LevelCost(lvl.name, n, lvl.period, payload, count, bw,
                              count * comm_s, messages, wire_bytes=wire,
                              compute_s=count * compute_s,
+                             codec=getattr(lvl.reducer, "codec_name", ""),
                              overlap_s=count * wall_s))
     return tuple(out)
 

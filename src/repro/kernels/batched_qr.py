@@ -1,0 +1,102 @@
+"""Batched thin-QR as a Pallas TPU kernel — PowerSGD's orthonormalization
+hot path (comm/lowrank.py ``_orthonormalize``).
+
+The low-rank reducer needs the Q factor of a *tall-skinny* panel
+``P = M Q_prev`` per learner: shape ``[rows, a, r]`` with ``rows`` the
+flattened ``[pods, G, S]`` learner batch, ``a`` up to a bucket side
+(hundreds..thousands) and ``r`` the PowerSGD rank (2..8).  XLA lowers
+``jnp.linalg.qr`` to a per-matrix LAPACK/Householder custom call that
+neither batches over learners nor fuses with the surrounding einsums —
+on the per-leaf path it is the straggler that cannot bucket or pipeline.
+
+TPU-native design: classical Gram-Schmidt with reorthogonalization
+(CGS2), one program per batch row, the whole ``[a, r]`` panel held in
+VMEM:
+
+  * the q accumulator is ZERO-initialized, so projecting against the
+    full q tile subtracts only the already-filled columns ``< j`` — the
+    column loop needs no masking and the (lane-padded) columns past
+    ``r`` stay zero;
+  * each column does two projection passes (CGS2: a second pass restores
+    orthogonality to fp32 working precision, where plain CGS loses it
+    for ill-conditioned panels) — all VPU reductions over VMEM, no MXU;
+  * a rank-deficient column (zero norm after projection) emits a ZERO
+    column instead of dividing by ~0: for PowerSGD that contributes
+    nothing to the approximation and the error-feedback residual
+    re-accumulates the mass, whereas LAPACK would emit an arbitrary
+    orthonormal completion direction.
+
+Sign/convention caveat: CGS fixes each column's sign by the input
+panel's, LAPACK by R's positive diagonal, so Q may differ from
+``jnp.linalg.qr`` by per-column signs.  The *projector* ``Q Q^T`` — the
+only thing PowerSGD's ``P^ Q'^T`` reconstruction consumes — is
+convention-free; kernel tests compare projectors and orthonormality,
+not raw factors (kernels/ref.py ``batched_qr_ref`` is the oracle).
+
+Grid = (batch,): panels are padded to the fp32 sublane multiple (8) in
+``a`` and to the lane multiple (128) in ``r``; zero-padding is exact
+(zero rows contribute nothing to inner products, zero columns stay
+zero) and is sliced off by the wrapper.
+
+Validated against ``jnp.linalg.qr`` with interpret=True on CPU
+(tests/test_kernels.py), including non-pow2 rows, tall/near-square
+panels and GQA-style odd dims.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import compiler_params
+
+_SUBLANE = 8      # fp32 second-minor tile multiple
+_LANE = 128       # minor (lane) tile multiple
+_EPS = 1e-30      # rank-deficiency floor on the squared column norm
+
+
+def _qr_kernel(x_ref, q_ref, *, r: int):
+    """One batch row: CGS2 over the ``r`` live columns of the panel."""
+    q_ref[...] = jnp.zeros_like(q_ref)
+    x = x_ref[0].astype(jnp.float32)                    # [a_pad, r_pad]
+    for j in range(r):                                  # r is small: 2..8
+        v = x[:, j:j + 1]                               # [a_pad, 1]
+        for _ in range(2):                              # CGS2 passes
+            q = q_ref[0]
+            # coefficients against every filled column (cols >= j are
+            # still zero, so they subtract nothing)
+            c = jnp.sum(q * v, axis=0, keepdims=True)   # [1, r_pad]
+            v = v - jnp.sum(q * c, axis=1, keepdims=True)
+        nrm2 = jnp.sum(v * v)
+        inv = jnp.where(nrm2 > _EPS, jax.lax.rsqrt(nrm2), 0.0)
+        q_ref[0, :, j:j + 1] = v * inv
+
+
+def batched_qr(p: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Thin-QR Q factor over arbitrary leading batch dims:
+    ``[..., a, r] -> Q [..., a, r]`` with ``a >= r`` (columns of a
+    rank-deficient panel come back zero — see module docstring)."""
+    *lead, a, r = p.shape
+    if a < r:
+        raise ValueError(
+            f"batched_qr needs a tall panel (a >= r), got {tuple(p.shape)}")
+    batch = math.prod(lead) if lead else 1
+    x = p.reshape(batch, a, r).astype(jnp.float32)
+    a_pad = -(-a // _SUBLANE) * _SUBLANE
+    r_pad = -(-r // _LANE) * _LANE
+    if (a_pad, r_pad) != (a, r):
+        x = jnp.pad(x, ((0, 0), (0, a_pad - a), (0, r_pad - r)))
+
+    q = pl.pallas_call(
+        functools.partial(_qr_kernel, r=r),
+        grid=(batch,),
+        in_specs=[pl.BlockSpec((1, a_pad, r_pad), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, a_pad, r_pad), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, a_pad, r_pad), jnp.float32),
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(x)
+    return q[:, :a, :r].reshape(p.shape).astype(p.dtype)

@@ -94,6 +94,52 @@ def topk_compress(x, k: int, *, impl: str = "xla", block_n: int = 1024,
               interpret=(impl == "pallas_interpret"))
 
 
+def batched_qr(p, *, impl: str = "auto") -> jax.Array:
+    """Dispatchable batched thin-QR Q factor: ``[..., a, r] -> Q``.
+
+    PowerSGD's orthonormalization hot path (comm/lowrank.py): one CGS2
+    program per flattened ``[pods, G, S]`` learner row on TPU
+    (kernels/batched_qr.py), the LAPACK/Householder ``jnp.linalg.qr``
+    oracle elsewhere.  ``impl="auto"`` follows the ``flash_decode``
+    convention: compiled Pallas on a TPU backend, XLA oracle everywhere
+    else; ``"pallas_interpret"`` runs the kernel body in Python on CPU.
+    Note the CGS2 kernel and the oracle agree on the projector
+    ``Q Q^T``, not on per-column signs.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return kref.batched_qr_ref(p)
+    from repro.kernels.batched_qr import batched_qr as bqr
+    return bqr(p, interpret=(impl == "pallas_interpret"))
+
+
+def qint8_pack(x, block: int, *, impl: str = "auto") -> jax.Array:
+    """Dispatchable fused quantize+pack: ``[rows, n] -> int8 [rows, nb,
+    block + 4]`` — one contiguous wire buffer (payload + bitcast scales)
+    so a qint8 bucket rides the collective as ONE message instead of
+    two.  Bit-identical across impls (the scale bytes are a bitcast);
+    ``impl="auto"`` = Pallas on TPU, oracle elsewhere.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return kref.qint8_pack_ref(x, block)
+    from repro.kernels.qint8_pack import qint8_pack as qp
+    return qp(x, block, interpret=(impl == "pallas_interpret"))
+
+
+def qint8_unpack(wire, n: int, *, impl: str = "auto") -> jax.Array:
+    """Inverse of :func:`qint8_pack`: ``int8 [rows, nb, block + 4] ->
+    fp32 [rows, n]``."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return kref.qint8_unpack_ref(wire, n)
+    from repro.kernels.qint8_pack import qint8_unpack as qu
+    return qu(wire, n, interpret=(impl == "pallas_interpret"))
+
+
 def rwkv6_wkv(r, k, v, w, u, state, *, impl: str = "xla",
               block_t: int = 64) -> Tuple[jax.Array, jax.Array]:
     """Dispatchable WKV6: r/k/v/w [B,S,H,D], u [H,D], state [B,H,D,D]."""

@@ -1,0 +1,104 @@
+"""Fused absmax + quantize + pack for the qint8 codec — one pass over
+the bucket, ONE contiguous wire buffer per bucket.
+
+The legacy path (comm/quant.py ``quantize_block``/``dequantize_block``)
+is two-pass and two-message: an absmax reduction materializes a
+``[rows, nb]`` fp32 scale array, a second pass quantizes, and the int8
+payload and the fp32 scales ride the collective as SEPARATE arrays —
+doubling the per-bucket message count that latency-dominated tiers pay
+for (see ``LevelCost.messages``).
+
+This kernel fuses the scan and packs both into a single int8 buffer:
+
+    wire[rows, nb, block + 4]
+      wire[..., :block]  int8 quantized values (one block per row)
+      wire[..., block:]  the block's fp32 scale, bitcast to 4 int8 bytes
+
+Quantization math is IDENTICAL to the legacy path — ``scale =
+max|x| / 127`` clamped at 1e-12, ``q = clip(round(x / scale), ±127)`` —
+and the scale bytes are a bitcast (not a cast), so pack→unpack is
+bit-identical to quantize→dequantize; tests assert exact equality
+against both the pure-jnp oracle (kernels/ref.py) and the legacy
+two-pass functions.
+
+Layout notes: one program per learner row, the row's ``[nb, block]``
+block matrix resident in VMEM; the wrapper pads the trailing dim to a
+whole number of blocks (zero padding quantizes to zero and is sliced
+off after unpack — the scale of an all-zero block is the 1e-12 clamp,
+never a divide-by-zero).  The ``block + 4`` minor dim is deliberately
+NOT lane-aligned: it is the wire format, and the 4-byte scale tail per
+block is the whole point — misaligned stores are a one-time relayout in
+VMEM, paid once per bucket instead of a second HBM pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import compiler_params
+
+_SCALE_BYTES = 4       # one fp32 scale per block, bitcast to int8[4]
+_SCALE_FLOOR = 1e-12   # matches comm/quant.py quantize_block
+
+
+def _pack_kernel(x_ref, out_ref, *, block: int):
+    xb = x_ref[0].astype(jnp.float32)                     # [nb, block]
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, _SCALE_FLOOR)              # [nb, 1]
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    # fp32 -> int8[4] bitcast appends the byte dim: [nb] -> [nb, 4]
+    sb = jax.lax.bitcast_convert_type(scale[:, 0], jnp.int8)
+    out_ref[0, :, :block] = q
+    out_ref[0, :, block:] = sb
+
+
+def _unpack_kernel(w_ref, out_ref, *, block: int):
+    w = w_ref[0]                                          # [nb, block+4]
+    q = w[:, :block].astype(jnp.float32)
+    # int8[nb, 4] -> fp32[nb]: the byte dim collapses
+    scale = jax.lax.bitcast_convert_type(w[:, block:], jnp.float32)
+    out_ref[0] = q * scale[:, None]
+
+
+def qint8_pack(x: jax.Array, block: int, *,
+               interpret: bool = False) -> jax.Array:
+    """``[rows, n] -> int8 [rows, nb, block + 4]`` fused wire buffer
+    (``nb = ceil(n / block)``; the final partial block is zero-padded)."""
+    rows, n = x.shape
+    nb = -(-n // block)
+    xb = x.astype(jnp.float32)
+    if nb * block != n:
+        xb = jnp.pad(xb, ((0, 0), (0, nb * block - n)))
+    xb = xb.reshape(rows, nb, block)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, block=block),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, nb, block), lambda r: (r, 0, 0))],
+        out_specs=pl.BlockSpec((1, nb, block + _SCALE_BYTES),
+                               lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, nb, block + _SCALE_BYTES),
+                                       jnp.int8),
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(xb)
+
+
+def qint8_unpack(wire: jax.Array, n: int, *,
+                 interpret: bool = False) -> jax.Array:
+    """``int8 [rows, nb, block + 4] -> fp32 [rows, n]`` dequantize —
+    inverse of :func:`qint8_pack` (padding tail sliced off)."""
+    rows, nb, width = wire.shape
+    block = width - _SCALE_BYTES
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, block=block),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, nb, width), lambda r: (r, 0, 0))],
+        out_specs=pl.BlockSpec((1, nb, block), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, nb, block), jnp.float32),
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(wire)
+    return out.reshape(rows, nb * block)[:, :n]

@@ -112,6 +112,52 @@ def topk_compress_ref(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     return vals, idx.astype(jnp.int32)
 
 
+def batched_qr_ref(p: jax.Array) -> jax.Array:
+    """Batched thin-QR Q factor: ``[..., a, r] -> Q [..., a, r]``.
+
+    XLA lowers this to one Householder QR per batch element (LAPACK on
+    CPU).  Column signs follow LAPACK's convention; the Pallas CGS2
+    kernel (kernels/batched_qr.py) may flip per-column signs, so parity
+    tests compare the projector ``Q Q^T`` — the only quantity PowerSGD's
+    reconstruction consumes — rather than the raw factor.
+    """
+    q, _ = jnp.linalg.qr(p.astype(jnp.float32))
+    return q.astype(p.dtype)
+
+
+_QINT8_SCALE_BYTES = 4
+
+
+def qint8_pack_ref(x: jax.Array, block: int) -> jax.Array:
+    """Fused quantize+pack oracle: ``[rows, n] -> int8 [rows, nb,
+    block + 4]`` (int8 payload + bitcast fp32 scale per block — the wire
+    format of kernels/qint8_pack.py).  Scale math is bit-identical to
+    comm/quant.py ``quantize_block``; the zero-padded tail of the final
+    partial block quantizes to zero.
+    """
+    rows, n = x.shape
+    nb = -(-n // block)
+    xb = x.astype(jnp.float32)
+    if nb * block != n:
+        xb = jnp.pad(xb, ((0, 0), (0, nb * block - n)))
+    xb = xb.reshape(rows, nb, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    sb = jax.lax.bitcast_convert_type(scale[..., 0], jnp.int8)
+    return jnp.concatenate([q, sb], axis=-1)
+
+
+def qint8_unpack_ref(wire: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`qint8_pack_ref`: ``int8 [rows, nb, block + 4]
+    -> fp32 [rows, n]`` (padding tail sliced off)."""
+    rows, nb, width = wire.shape
+    block = width - _QINT8_SCALE_BYTES
+    q = wire[..., :block].astype(jnp.float32)
+    scale = jax.lax.bitcast_convert_type(wire[..., block:], jnp.float32)
+    return (q * scale[..., None]).reshape(rows, nb * block)[:, :n]
+
+
 def rwkv6_wkv_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
                   u: jax.Array, state: jax.Array
                   ) -> Tuple[jax.Array, jax.Array]:

@@ -49,7 +49,9 @@ def build_ab_reduction(sched: str, cap: int, *, n_leaves: int = AB_LEAVES,
     """One A/B variant: the jitted ``level`` reduction (local / pod /
     global grouped mean) of a synthetic ``n_leaves``-leaf tree over the
     ``topo_shape`` learner mesh, on the serial (``Bucketed``) or
-    pipelined (``Pipelined``) schedule at bucket cap ``cap``.  Returns
+    pipelined (``Pipelined``) schedule at bucket cap ``cap``, or with
+    ``sched="perleaf"`` the raw un-bucketed reducer (``cap`` unused) —
+    the one-collective-per-leaf baseline of the codec A/B.  Returns
     the pieces the benchmark, the HLO test, and the autotune probe all
     need: reducer, single-learner tree, stacked params, carried state,
     shardings, the jitted fn, and the bucket count."""
@@ -66,8 +68,13 @@ def build_ab_reduction(sched: str, cap: int, *, n_leaves: int = AB_LEAVES,
         pspec = P("pod", "group", "local") if leaf.ndim >= 3 else P()
         return NamedSharding(mesh, pspec)
 
-    engine = Pipelined if sched == "pipelined" else Bucketed
-    red = engine(get_reducer(spec), cap)
+    if sched == "perleaf":
+        # the un-bucketed baseline: one collective per leaf (two for
+        # two-message codecs), what the codec A/B rows beat
+        red = get_reducer(spec)
+    else:
+        engine = Pipelined if sched == "pipelined" else Bucketed
+        red = engine(get_reducer(spec), cap)
     state = red.init_state(jax.tree.map(jnp.zeros_like, params))
     shardings = (jax.tree.map(shard, params), jax.tree.map(shard, state))
     avg_fn = LEVEL_AVG_FNS[level]
@@ -82,7 +89,8 @@ def build_ab_reduction(sched: str, cap: int, *, n_leaves: int = AB_LEAVES,
         "state": state,
         "shardings": shardings,
         "fn": jax.jit(reduction, in_shardings=shardings),
-        "n_buckets": red.layout_for(params).n_buckets,
+        "n_buckets": (red.layout_for(params).n_buckets
+                      if hasattr(red, "layout_for") else n_leaves),
     }
 
 

@@ -83,6 +83,65 @@ def test_fit_without_dci_samples_keeps_base_slow_bw():
     assert cal.model.fast_bw == pytest.approx(TRUE.fast_bw, rel=1e-6)
 
 
+def test_fit_per_codec_compress_bw(tmp_path):
+    """Codec-labeled samples fit one compress_bw per family into
+    ``CommModel.codec_bw`` (reported as ``compress_bw[<codec>]``);
+    codecs the fit never saw fall back to the shared constant, and the
+    artifact round-trips the per-codec rates."""
+    true = CommModel(fast_bw=2.0e8, slow_bw=1.0e7, latency=3.0e-4,
+                     compress_bw=5.0e8,
+                     codec_bw=(("powersgd", 1.0e8), ("qint8", 2.0e9)))
+    samples = []
+    for tier, n in (("ici", 8), ("dci", 8)):
+        for v in (1 << 17, 1 << 20, 1 << 22):
+            for m, codec in ((1, ""), (8, ""), (1, "topk"),
+                             (1, "qint8"), (1, "powersgd")):
+                s = dict(tier=tier, n=n, payload_bytes=v,
+                         dense_bytes=4 * v, messages=m,
+                         has_codec=bool(codec), codec=codec)
+                s["min_us"] = predict_seconds(true, s) * 1e6
+                samples.append(s)
+    cal = fit_comm_model(samples)
+    m = cal.model
+    assert {"compress_bw[powersgd]", "compress_bw[qint8]",
+            "compress_bw[topk]"} <= set(cal.fitted)
+    assert m.compress_bw_for("qint8") == pytest.approx(2.0e9, rel=1e-6)
+    assert m.compress_bw_for("powersgd") == pytest.approx(1.0e8, rel=1e-6)
+    # topk had no codec_bw entry in `true`, so its per-codec column
+    # recovers the shared rate it was generated with
+    assert m.compress_bw_for("topk") == pytest.approx(5.0e8, rel=1e-6)
+    # a codec the fit never saw falls back to the shared constant —
+    # here unfitted (every codec sample was labeled), so the base value
+    assert "compress_bw" not in cal.fitted
+    assert m.compress_bw_for("randk") == m.compress_bw == \
+        CommModel().compress_bw
+    assert cal.median_rel_err < 1e-6
+    # artifact round-trip preserves the per-codec rates
+    path = str(tmp_path / "codec.json")
+    cal.save(path)
+    loaded = Calibration.load(path)
+    assert loaded.model == m
+    assert loaded.model.compress_bw_for("qint8") \
+        == pytest.approx(2.0e9, rel=1e-6)
+    with open(path) as f:
+        assert "codec_bw" in json.load(f)["comm_model"]
+    # theory's serial bill prices codec compute through the same
+    # per-codec lookup the fit produced
+    topo = HierTopology(1, 2, 4)
+    template = param_template(1 << 20, dtype="float32", n_leaves=4)
+    plan = ReductionPlan.parse("local@2/global@8:qint8:128")
+    lvl = plan.levels[-1]
+    with_codec = level_reduction_seconds(lvl, topo, template, m)
+    shared = level_reduction_seconds(
+        lvl, topo, template, dataclasses.replace(m, codec_bw=None))
+    # the fitted qint8 rate (2e9 B/s) is far below the shared base
+    # constant (150e9), so the per-codec bill must scale compute_s by
+    # exactly that ratio
+    assert with_codec[1] == pytest.approx(
+        shared[1] * m.compress_bw / 2.0e9, rel=1e-9)
+    assert with_codec[1] > shared[1]
+
+
 def test_calibration_artifact_roundtrip_and_resolve(tmp_path, monkeypatch):
     cal = fit_comm_model(synth_samples(TRUE))
     path = str(tmp_path / "calib.json")

@@ -312,6 +312,30 @@ def test_uniform_layout_pads_groups_and_roundtrips():
         == [b.shape for b in BucketLayout.build(tree).buckets]
 
 
+def test_matrix_uniform_layout_common_panel_and_roundtrips():
+    """matrix+uniform (the pipelined PowerSGD layout, previously
+    refused): every bucket of a multi-bucket group pads to the
+    elementwise-max common panel shape, so the scan's stacked stages are
+    rectangular; pack/unpack still round-trips bit-exactly."""
+    tree = _mixed_tree()
+    lay = BucketLayout.build(tree, bucket_bytes=64, matrix=True,
+                             uniform=True)
+    by_dtype = {}
+    for b in lay.buckets:
+        assert len(b.shape) == 2
+        by_dtype.setdefault(b.dtype, []).append(b)
+    for group in by_dtype.values():
+        if len(group) > 1:
+            assert len({b.shape for b in group}) == 1
+            assert all(b.padded_size >= b.size for b in group)
+    assert any(len(g) > 1 for g in by_dtype.values())  # really exercised
+    back = lay.unpack(lay.pack(tree))
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
 def _abstract_shard_plan(F=2):
     """ShardPlan over an AbstractMesh — layout resolution needs only the
     mesh axis sizes, so layout unit tests run without multiple devices."""
@@ -577,21 +601,52 @@ def test_pipelined_qint8_reduces_within_quant_error():
         np.testing.assert_allclose(a, b, atol=max(bound, 0.05))
 
 
-def test_pipelined_powersgd_falls_back_to_serial():
-    """Matrix-mode reducers (unsplittable warm-start state) run the
-    serial schedule inside Pipelined.reduce — same results as Bucketed."""
+def test_pipelined_powersgd_bit_identical_to_serial_schedule():
+    """PowerSGD rides the pipeline (per-bucket warm-start state splits;
+    EF/ref finalized INSIDE the scan): on the same uniform matrix
+    layout, the pipelined schedule is bit-identical to the serial one —
+    outputs AND the carried state (ref, err, warm-started q).  The
+    layouts must match for the claim (ragged vs common-panel padding
+    changes the matrix reshape), so the serial leg runs Bucketed.reduce
+    unbound on the SAME Pipelined reducer."""
     tree = _mixed_tree()
     f32 = {k: v for k, v in tree.items() if v.dtype == jnp.float32}
-    ser_red = Bucketed(get_reducer("powersgd:2"), 64)
     pip_red = Pipelined(get_reducer("powersgd:2"), 64)
-    zeros = jax.tree.map(jnp.zeros_like, f32)
-    ser, _ = reduce_with(ser_red, global_average, f32,
-                         ser_red.init_state(zeros))
-    pip, _ = reduce_with(pip_red, global_average, f32,
-                         pip_red.init_state(zeros))
+    st0 = pip_red.init_state(jax.tree.map(jnp.zeros_like, f32))
+    n_b = pip_red.layout_for(f32).n_buckets
+    assert n_b >= 2                      # a real multi-stage pipeline
+    assert pip_red.inner.split_bucket_states(st0, n_b) is not None
+    ser, ser_st = Bucketed.reduce(pip_red, global_average, f32, st0)
+    pip, pip_st = reduce_with(pip_red, global_average, f32, st0)
     for k in f32:
-        np.testing.assert_allclose(np.asarray(pip[k]), np.asarray(ser[k]),
-                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(pip[k]),
+                                      np.asarray(ser[k]))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), pip_st, ser_st)
+
+
+def test_pipelined_topk_ef_bit_identical_to_serial_schedule():
+    """Stateful sparse EF codec through the finalize-in-scan path: same
+    uniform layout, serial vs pipelined schedules agree bitwise on
+    outputs AND the carried EF state (residual, reference) — the EF
+    update must not see stale or re-materialized references when it
+    moves inside the scan body."""
+    tree = _mixed_tree()
+    f32 = {k: v for k, v in tree.items() if v.dtype == jnp.float32}
+    pip_red = Pipelined(get_reducer("topk:0.3"), 64)
+    st0 = pip_red.init_state(jax.tree.map(jnp.zeros_like, f32))
+    assert pip_red.layout_for(f32).n_buckets >= 2
+    ser, ser_st = Bucketed.reduce(pip_red, global_average, f32, st0)
+    pip, pip_st = reduce_with(pip_red, global_average, f32, st0)
+    for k in f32:
+        np.testing.assert_array_equal(np.asarray(pip[k]),
+                                      np.asarray(ser[k]))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), pip_st, ser_st)
+    # and the EF state is genuinely non-trivial (the codec dropped mass)
+    assert any(float(jnp.max(jnp.abs(x))) > 0
+               for x in jax.tree.leaves(pip_st)
+               if jnp.issubdtype(x.dtype, jnp.floating))
 
 
 # ------------------------------ accounting ---------------------------- #
@@ -610,6 +665,17 @@ def test_bucketed_payload_and_message_accounting():
     topk = Bucketed(get_reducer("topk:0.1"))
     n = 100 * 10 + 10 + 77
     assert topk.payload_bytes(tree) == max(1, round(0.1 * n)) * 8
+    # fused qint8 ships ONE packed buffer per bucket; the twopass
+    # baseline bills the int8 payload and the fp32 scales separately
+    assert Bucketed(get_reducer("qint8:128")).n_messages(tree) == 1
+    assert Bucketed(get_reducer("qint8:128:twopass")).n_messages(tree) == 2
+    assert get_reducer("qint8:128").n_messages(tree) == 3
+    assert get_reducer("qint8:128:twopass").n_messages(tree) == 6
+    # powersgd: two factor messages per compressible matrix bucket;
+    # un-bucketed, two for the compressible w plus one each for the
+    # dense-fallback 1-D b and v
+    assert Bucketed(get_reducer("powersgd:2")).n_messages(tree) == 2
+    assert get_reducer("powersgd:2").n_messages(tree) == 4
 
 
 def test_plan_comm_costing_bills_messages():

@@ -96,12 +96,44 @@ def test_qint8_roundtrip_error_bound():
 
 
 def test_qint8_payload_accounting():
-    red = QInt8Reducer(block=128)
     tree = {"w": jnp.zeros((1000,)), "b": jnp.zeros((10,))}
+    twopass = QInt8Reducer(block=128, fused=False)
     # 1000 -> 1000 B + 8 scales * 4 B ; 10 -> 10 B + 1 scale * 4 B
-    assert red.payload_bytes(tree) == 1000 + 32 + 10 + 4
+    assert twopass.payload_bytes(tree) == 1000 + 32 + 10 + 4
     dense = MeanReducer().payload_bytes(tree)
-    assert dense == 4040 and dense / red.payload_bytes(tree) > 3.8
+    assert dense == 4040 and dense / twopass.payload_bytes(tree) > 3.8
+    # the fused pack ships whole (block + 4 B scale) wire blocks, zero
+    # tail included: 8 blocks for w, 1 for b — honestly billed
+    fused = QInt8Reducer(block=128)
+    assert fused.payload_bytes(tree) == (8 + 1) * (128 + 4)
+    assert dense / fused.payload_bytes(tree) > 3.3
+    # and collapses the per-reduction message count 2 -> 1 per leaf
+    assert fused.n_messages(tree) == 2 and twopass.n_messages(tree) == 4
+    # spec round-trip for both wire layouts
+    assert get_reducer("qint8:128").describe() == "qint8:128"
+    assert get_reducer("qint8:128:twopass").describe() \
+        == "qint8:128:twopass"
+    assert get_reducer("qint8:twopass").block == 256
+    assert not get_reducer("qint8:twopass").fused
+
+
+def test_qint8_fused_reduction_matches_twopass_bitwise():
+    """The fused single-buffer wire format is a PACKING change only:
+    under jit (reducers always run jitted) the dequantized values are
+    bit-identical to the legacy two-pass quantize path, so the whole
+    reduction agrees bitwise."""
+    topo = HierTopology(1, 2, 2)
+    key = jax.random.PRNGKey(9)
+    tree = {"w": jax.random.normal(key, topo.shape + (13, 7)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   topo.shape + (37,))}
+    out_f, _ = jax.jit(lambda t: reduce_with(
+        get_reducer("qint8:32"), global_average, t, ()))(tree)
+    out_t, _ = jax.jit(lambda t: reduce_with(
+        get_reducer("qint8:32:twopass"), global_average, t, ()))(tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out_f[k]),
+                                      np.asarray(out_t[k]))
 
 
 # ------------------------------ sparse + EF --------------------------- #

@@ -195,6 +195,148 @@ except ImportError:                                   # pragma: no cover
     pass
 
 
+# ------------- codec kernels: batched QR + fused qint8 pack ---------- #
+
+def _proj(q):
+    """Projector QQ^T — the convention-free quantity PowerSGD consumes
+    (the kernel's CGS2 column signs may differ from LAPACK's)."""
+    return jnp.einsum("...ij,...kj->...ik", q, q)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 8, 2),
+    (5, 33, 2),               # non-pow2 rows
+    pytest.param((8, 96, 4), marks=_slow),
+    (3, 57, 3),               # GQA-style odd panel dims
+    (2, 7, 5),                # near-square, a barely >= r
+    pytest.param((4, 2, 4, 78, 2), marks=_slow),   # extra batch dims
+])
+def test_batched_qr_interpret_matches_oracle(shape):
+    """CGS2 kernel vs jnp.linalg.qr: projector parity plus
+    orthonormality of the kernel's own Q."""
+    p = jax.random.normal(jax.random.PRNGKey(sum(shape)), shape)
+    q = ops.batched_qr(p, impl="pallas_interpret")
+    q_ref = ref.batched_qr_ref(p)
+    assert q.shape == p.shape and q.dtype == p.dtype
+    np.testing.assert_allclose(np.asarray(_proj(q)),
+                               np.asarray(_proj(q_ref)),
+                               atol=5e-6, rtol=1e-5)
+    r = shape[-1]
+    gram = np.asarray(jnp.einsum("...ji,...jk->...ik", q, q))
+    np.testing.assert_allclose(gram, np.broadcast_to(np.eye(r), gram.shape),
+                               atol=5e-6)
+
+
+def test_batched_qr_xla_impl_is_oracle():
+    p = jax.random.normal(jax.random.PRNGKey(1), (3, 20, 2))
+    np.testing.assert_array_equal(
+        np.asarray(ops.batched_qr(p, impl="xla")),
+        np.asarray(ref.batched_qr_ref(p)))
+
+
+def test_batched_qr_rank_deficient_column_zero_not_nan():
+    """A zero input column must come back as a ZERO Q column (the EF
+    residual re-accumulates its mass), never NaNs from rsqrt(0); the
+    surviving columns stay orthonormal."""
+    p = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 3))
+    p = p.at[..., 2].set(0.0)
+    q = np.asarray(ops.batched_qr(p, impl="pallas_interpret"))
+    assert np.isfinite(q).all()
+    np.testing.assert_array_equal(q[..., 2], np.zeros_like(q[..., 2]))
+    gram = np.einsum("bji,bjk->bik", q[..., :2], q[..., :2])
+    np.testing.assert_allclose(gram, np.broadcast_to(np.eye(2), (2, 2, 2)),
+                               atol=5e-6)
+
+
+def test_batched_qr_rejects_wide_panels():
+    with pytest.raises(ValueError, match="tall panel"):
+        ops.batched_qr(jnp.zeros((2, 3, 5)), impl="pallas_interpret")
+
+
+@pytest.mark.parametrize("rows,n,block", [
+    (1, 37, 8),               # partial final block
+    (5, 1000, 128),
+    (2, 57, 16),              # GQA-style odd length
+    (4, 128, 128),            # exact block multiple
+    pytest.param(3, 4096, 256, marks=_slow),
+])
+def test_qint8_pack_bit_identical_under_jit(rows, n, block):
+    """Fused pack/unpack (interpret) == oracle == the legacy two-pass
+    quantizer, BIT-exact — all three under jit (XLA's eager constant
+    folding of the /127 scale division differs by 1 ulp from the jitted
+    program; reducers always run jitted)."""
+    from repro.comm.quant import dequantize_block, quantize_block
+    x = jax.random.normal(jax.random.PRNGKey(rows * n), (rows, n))
+    pack_k = jax.jit(lambda x: ops.qint8_pack(x, block,
+                                              impl="pallas_interpret"))
+    pack_r = jax.jit(lambda x: ref.qint8_pack_ref(x, block))
+    w_k, w_r = pack_k(x), pack_r(x)
+    nb = -(-n // block)
+    assert w_k.dtype == jnp.int8 and w_k.shape == (rows, nb, block + 4)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    un_k = jax.jit(lambda w: ops.qint8_unpack(w, n,
+                                              impl="pallas_interpret"))
+    un_r = jax.jit(lambda w: ref.qint8_unpack_ref(w, n))
+    got = np.asarray(un_k(w_k))
+    np.testing.assert_array_equal(got, np.asarray(un_r(w_r)))
+    legacy = jax.jit(
+        lambda x: dequantize_block(*quantize_block(x, block), n))
+    np.testing.assert_array_equal(got, np.asarray(legacy(x)))
+    # round-trip error bound the reducer's docstring promises
+    scale = np.abs(np.asarray(x)).max() / 127.0
+    assert np.abs(got - np.asarray(x)).max() <= scale * 0.5 + 1e-7
+
+
+def test_qint8_pack_xla_impl_is_oracle():
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 300))
+    w = ops.qint8_pack(x, 64, impl="xla")
+    np.testing.assert_array_equal(np.asarray(w),
+                                  np.asarray(ref.qint8_pack_ref(x, 64)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.qint8_unpack(w, 300, impl="xla")),
+        np.asarray(ref.qint8_unpack_ref(w, 300)))
+
+
+try:
+    from hypothesis import given, settings as _csettings
+    import hypothesis.strategies as _cst
+
+    @_csettings(deadline=None, max_examples=10)
+    @given(_cst.integers(1, 6), _cst.integers(2, 600),
+           _cst.integers(1, 4))
+    def test_property_batched_qr_projector(batch, a, r):
+        """Hypothesis sweep: projector parity on random tall panels,
+        arbitrary (non-pow2, near-square) dims."""
+        r = min(r, a)
+        p = jax.random.normal(jax.random.PRNGKey(batch * 977 + a),
+                              (batch, a, r))
+        q = ops.batched_qr(p, impl="pallas_interpret")
+        np.testing.assert_allclose(
+            np.asarray(_proj(q)), np.asarray(_proj(ref.batched_qr_ref(p))),
+            atol=1e-4, rtol=1e-4)
+
+    @_csettings(deadline=None, max_examples=10)
+    @given(_cst.integers(1, 4), _cst.integers(1, 512),
+           _cst.sampled_from([8, 32, 128]))
+    def test_property_qint8_pack_roundtrip(rows, n, block):
+        """Hypothesis sweep: fused wire buffer bit-equal to the oracle
+        and round-trip error inside the absmax/254 per-element bound."""
+        x = jax.random.normal(jax.random.PRNGKey(rows * 401 + n),
+                              (rows, n))
+        pack = jax.jit(lambda x: ops.qint8_pack(x, block,
+                                                impl="pallas_interpret"))
+        un = jax.jit(lambda w: ops.qint8_unpack(w, n,
+                                                impl="pallas_interpret"))
+        ref_pack = jax.jit(lambda x: ref.qint8_pack_ref(x, block))
+        np.testing.assert_array_equal(np.asarray(pack(x)),
+                                      np.asarray(ref_pack(x)))
+        got = np.asarray(un(pack(x)))
+        scale = np.abs(np.asarray(x)).max() / 127.0
+        assert np.abs(got - np.asarray(x)).max() <= scale * 0.5 + 1e-7
+except ImportError:                                   # pragma: no cover
+    pass
+
+
 # ------------------------- flash decode ------------------------------ #
 
 def _paged_case(key, b, hq, hkv, d, page, maxp, dtype=jnp.float32,

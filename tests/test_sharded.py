@@ -73,6 +73,24 @@ for spec in ("mean", "cast:bfloat16"):
                               - w.astype(jnp.float32))))
         for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)))
 
+# fused qint8 through the sharded RS/AG path: shard-run packing shifts
+# the quantizer's block boundaries vs the per-leaf layout, so parity is
+# the per-block error bound vs the dense mean, not bit-identity; the
+# fused pack must still ship ONE message per bucket
+b = build_sharded_ab_reduction("serial", AB_SMALL_CAP, spec="qint8:128")
+p = jax.device_put(b["params"], b["shardings"][0])
+s = jax.device_put(b["state"], b["shardings"][1])
+got, _ = b["fn"](p, s)
+dense, _ = reduce_with(get_reducer("mean"), global_average,
+                       b["params"], ())
+out["maxdiff_qint8"] = max(
+    float(jnp.max(jnp.abs(g - w)))
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(dense)))
+out["absmax_qint8"] = max(
+    float(jnp.max(jnp.abs(x))) for x in jax.tree.leaves(b["params"]))
+out["qint8_messages"] = int(b["reducer"].n_messages(b["tree1"]))
+out["qint8_buckets"] = int(b["n_buckets"])
+
 # EF / reducer state round-trips through checkpoint in shard space
 for tag, spec in (("topk", "topk:0.05"), ("qint8", "qint8")):
     b = build_sharded_ab_reduction("serial", AB_SMALL_CAP, spec=spec)
@@ -149,6 +167,16 @@ def test_sharded_mean_and_cast_match_replicated_oracle(sharded_run):
     _, _, meta = sharded_run
     assert meta["maxdiff_mean"] == 0.0
     assert meta["maxdiff_cast"] == 0.0
+
+
+def test_sharded_fused_qint8_within_quant_error(sharded_run):
+    """fsdp=2 coverage for the fused single-buffer qint8 pack: the
+    sharded bucket reduction lands within the quantizer's error bound
+    of the dense mean, and ships exactly one packed message per
+    bucket."""
+    _, _, meta = sharded_run
+    assert meta["maxdiff_qint8"] <= meta["absmax_qint8"] / 100.0, meta
+    assert meta["qint8_messages"] == meta["qint8_buckets"], meta
 
 
 def test_sharded_ef_state_roundtrips_through_checkpoint(sharded_run):
