@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_autotune    -> probe -> calibrate -> recommend pipeline (autotune/)
   bench_serving     -> paged continuous batching vs dense wave serving A/B
                        + flash-decode kernel vs oracle (serve/, kernels/)
+  bench_elastic     -> elastic membership: 20%-dropout convergence vs the
+                       Thm 3.2 bars, masked-reduction overhead, fleet
+                       reshape round-trip, fault determinism (elastic/)
   roofline          -> §Roofline rows from the dry-run artifacts (if present)
 
 ``bench_bucketing`` additionally writes machine-readable
@@ -33,7 +36,12 @@ or recommended-plan records go missing.  ``bench_serving`` writes
 tokens_per_s, p99_ms, wasted_ratio, decode_steps and speedup_vs_dense on
 the paged rows, plus the flashdecode oracle/kernel pair); CI runs its
 2-round smoke and fails if the paged+dense or flashdecode rows go
-missing.
+missing.  ``bench_elastic`` writes ``BENCH_elastic.json`` (the
+fault-free vs 20%-pod-dropout convergence pair with loss_gap /
+thm32_bar / within_bars, the masked-overhead A/B, the 4->6->4 reshape
+round-trip flags, and the cross-process fault-schedule hash); CI runs
+its smoke and asserts within_bars, determinism, and the reshape
+bit-preservation flags.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig1] [--smoke]
 """
@@ -70,9 +78,9 @@ def main() -> None:
 
     from benchmarks import (bench_adaptive_k2, bench_autotune,
                             bench_bucketing, bench_comm, bench_compression,
-                            bench_k1_s, bench_k2, bench_large_proxy,
-                            bench_layouts, bench_serving, bench_vs_kavg,
-                            roofline)
+                            bench_elastic, bench_k1_s, bench_k2,
+                            bench_large_proxy, bench_layouts,
+                            bench_serving, bench_vs_kavg, roofline)
     suites = [
         ("bench_k2", bench_k2.run),
         ("bench_k1_s", bench_k1_s.run),
@@ -88,6 +96,8 @@ def main() -> None:
          lambda: bench_autotune.run(smoke=args.smoke)),
         ("bench_serving",
          lambda: bench_serving.run(smoke=args.smoke)),
+        ("bench_elastic",
+         lambda: bench_elastic.run(smoke=args.smoke)),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")
@@ -105,7 +115,8 @@ def main() -> None:
             traceback.print_exc()
         records = {"bench_bucketing": (bench_bucketing, "BENCH_reduction"),
                    "bench_autotune": (bench_autotune, "BENCH_autotune"),
-                   "bench_serving": (bench_serving, "BENCH_serving")}
+                   "bench_serving": (bench_serving, "BENCH_serving"),
+                   "bench_elastic": (bench_elastic, "BENCH_elastic")}
         if name in records and records[name][0].RECORDS:
             # smoke runs go to a sibling file so they never clobber the
             # checked-in full-round snapshot (README "Bucketed reductions")

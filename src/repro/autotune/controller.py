@@ -93,6 +93,11 @@ class CostAwarePlan:
     # engines then bill the reduce-scatter/all-gather wire bytes
     # (payload/F per sharded bucket) instead of the replicated payload
     shards: Any = None
+    # elastic expected-cost billing: scalar per-member miss probability
+    # (or {level_name: p}) the level costs are priced under — an
+    # unreliable outer tier shrinks its n_eff ring, which moves the cost
+    # ratios and therefore the intermediate periods (theory.py)
+    drop_prob: Any = 0.0
     _ladder: AdaptivePlan = field(init=False, repr=False)
 
     def __post_init__(self):
@@ -114,8 +119,11 @@ class CostAwarePlan:
         resolved = apply_bucketing(self.plan, self.bucket_bytes,
                                    self.overlap, shards=self.shards)
         self._level_costs = tuple(
-            level_reduction_seconds(lvl, self.topo, self.template,
-                                    self.comm)[2]
+            level_reduction_seconds(
+                lvl, self.topo, self.template, self.comm,
+                drop_prob=(self.drop_prob.get(lvl.name, 0.0)
+                           if hasattr(self.drop_prob, "get")
+                           else float(self.drop_prob)))[2]
             for lvl in resolved.levels)
 
     @property

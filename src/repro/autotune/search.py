@@ -97,6 +97,7 @@ def search_plans(topo: HierTopology,
                  bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                  overlap: bool = True,
                  shards: Any = None,
+                 drop_prob=0.0,
                  top: Optional[int] = None) -> List[ScoredPlan]:
     """Rank the candidate grid; best (lowest score, feasible first)
     first.  ``gamma``/``L``/``M``/``F1_minus_Fstar`` are the Thm 3.4
@@ -112,7 +113,15 @@ def search_plans(topo: HierTopology,
     raw plan string (resolution re-applies at build time).  ``shards``
     (parallel/sharding.py ShardPlan) bills fsdp>1 candidates at their
     reduce-scatter/all-gather wire bytes (payload/F per sharded
-    bucket)."""
+    bucket).
+
+    ``drop_prob`` — score plans against an unreliable tier: a scalar (or
+    ``{level_name: p}`` mapping) per-member miss probability; each
+    level's ring terms are billed at ``effective_participants`` (elastic
+    expected-cost mode, core/theory.py).  The Thm 3.4 objective is left
+    at its dense constants — the masked mean keeps the averaging
+    unbiased over survivors, so the cost side is where unreliability
+    moves the ranking."""
     if isinstance(comm, Calibration):
         comm = comm.model
     cm = comm or CommModel()
@@ -127,7 +136,8 @@ def search_plans(topo: HierTopology,
         plan = ReductionPlan.parse(spec)
         resolved = apply_bucketing(plan, bucket_bytes, overlap,
                                    shards=shards)
-        costs = plan_comm_per_round(resolved, topo, template, cm)
+        costs = plan_comm_per_round(resolved, topo, template, cm,
+                                    drop_prob=drop_prob)
         comm_per_step = sum(c.overlap_s for c in costs) / plan.total_period
         k1 = plan.levels[0].period
         k2 = plan.total_period

@@ -135,6 +135,25 @@ def restore_checkpoint(path: str, like: Any, *,
         key = _path_str(kp)
         arr = arrays[key]
         if tuple(arr.shape) != tuple(leaf.shape):
+            # learner-count drift: same per-learner payload, different
+            # stacked [pods, groups, local] lead — the elastic-resume
+            # case, which has its own entry point
+            if (arr.ndim == len(leaf.shape) and arr.ndim > 3
+                    and tuple(arr.shape[3:]) == tuple(leaf.shape[3:])
+                    and tuple(arr.shape[:3]) != tuple(leaf.shape[:3])):
+                old_n = int(np.prod(arr.shape[:3]))
+                new_n = int(np.prod(leaf.shape[:3]))
+                raise ValueError(
+                    f"learner-count mismatch for '{key}': the checkpoint "
+                    f"was saved on a {tuple(arr.shape[:3])} "
+                    f"[pods, groups, local] learner grid ({old_n} "
+                    f"learners) but `like` expects "
+                    f"{tuple(leaf.shape[:3])} ({new_n} learners).  "
+                    f"restore_checkpoint never resizes the learner axes "
+                    f"— resume onto a different fleet with "
+                    f"repro.elastic.elastic_restore(path, like, "
+                    f"new_topo=...), which bit-preserves survivors and "
+                    f"remaps (or loudly drops) reducer state.")
             raise ValueError(
                 f"shape mismatch for '{key}': ckpt {arr.shape} vs "
                 f"expected {tuple(leaf.shape)}")

@@ -148,6 +148,19 @@ class BucketLayout:
     buckets: Tuple[BucketSpec, ...]
     shards: Optional[ShardPlan] = None
 
+    @property
+    def lead_invariant(self) -> bool:
+        """True when the packed run layout is independent of the learner
+        count — the property the elastic fleet reshape
+        (repro/elastic/reshape.py) relies on to re-index bucket-space EF
+        state across a join/leave by a pure lead-axes gather.  Flat
+        (``shards is None``) layouts qualify: slots and run lengths are
+        computed from per-learner trailing dims only.  Shard-aware
+        layouts do not — runs are padded to a multiple of the lead mesh
+        size and the codec view merges shards into the local axis — so
+        their reducer state is dropped loudly on reshape instead."""
+        return self.shards is None
+
     # ------------------------------------------------------------------ #
     # construction
     # ------------------------------------------------------------------ #

@@ -248,6 +248,17 @@ def reduce_with(reducer: Reducer, avg_fn: Callable, tree, state,
     compress stages with the grouped collectives instead of running the
     serial composition above.
 
+    Elastic-masking contract: participation masks (repro/elastic) ride
+    INSIDE ``avg_fn`` — the round builder closes the per-round ``active``
+    mask over ``average_over(..., mask=...)`` before handing ``avg_fn``
+    here, so reducers, bucket engines, and this dispatcher stay
+    mask-oblivious.  What a reducer must guarantee is only what it
+    already does: compress/decompress/finalize are per-learner-local
+    (vectorized over the stacked lead axes, no cross-learner mixing
+    outside ``avg_fn``), so an absent learner's payload simply gets
+    weight 0 in the masked mean and its EF carry is restored wholesale
+    by the caller's ``where_active`` select after finalize.
+
     Returns ``(averaged_tree, new_reducer_state)``.
     """
     own = getattr(reducer, "reduce", None)

@@ -1,7 +1,7 @@
 """Hier-AVG core: the paper's contribution as composable JAX modules."""
 from repro.core.topology import (HierTopology, global_average,  # noqa: F401
                                  local_average, pod_average, stack_like,
-                                 unstack_first)
+                                 unstack_first, where_active)
 from repro.core.plan import (ReductionLevel, ReductionPlan,  # noqa: F401
                              resolve_plan)
 from repro.core.hier_avg import (TrainState, init_state,  # noqa: F401

@@ -34,7 +34,8 @@ from repro.configs.base import HierAvgParams
 from repro.core.plan import (PlanLike, ReductionLevel, ReductionPlan,
                              apply_bucketing, apply_shards, init_comm_state,
                              resolve_plan)
-from repro.core.topology import HierTopology, average_over, stack_like
+from repro.core.topology import (HierTopology, average_over, stack_like,
+                                 where_active)
 from repro.optim import Optimizer
 
 
@@ -178,25 +179,42 @@ def make_sgd_step(loss_fn: Callable, optimizer: Optimizer,
 
 
 def _make_reduce(constraint_fn, sync_opt_state):
-    """reduce(level, state) -> state after one compressed reduction at
-    that level, touching only that level's comm_state entry."""
+    """reduce(level, state, active=None) -> state after one compressed
+    reduction at that level, touching only that level's comm_state entry.
 
-    def reduce(level: ReductionLevel, state: TrainState) -> TrainState:
+    ``active`` (elastic membership, repro/elastic): a boolean
+    ``[pods, G, S]`` participation mask.  The grouped mean renormalizes
+    over the present learners only (core/topology.py ``average_over``),
+    and absent learners keep their own params AND their EF/``comm_state``
+    untouched across the missed fire (``where_active`` select) — a
+    learner that missed a reduction neither contributes to nor observes
+    it.  ``active=None`` is the dense path, bit-identical to before.
+    """
+
+    def reduce(level: ReductionLevel, state: TrainState,
+               active=None) -> TrainState:
         avg_fn = lambda tree, cf=None, specs=None: average_over(  # noqa: E731
-            tree, level.axes, cf, specs)
+            tree, level.axes, cf, specs, active)
         if level.reducer.stateful:
             params, lvl_cs = reduce_with(
                 level.reducer, avg_fn, state.params,
                 state.comm_state[level.name], constraint_fn)
+            if active is not None:
+                lvl_cs = where_active(active, lvl_cs,
+                                      state.comm_state[level.name])
             comm_state = dict(state.comm_state)
             comm_state[level.name] = lvl_cs
         else:
             params, _ = reduce_with(level.reducer, avg_fn, state.params,
                                     (), constraint_fn)
             comm_state = state.comm_state
+        if active is not None:
+            params = where_active(active, params, state.params)
         if sync_opt_state:
-            state = state._replace(
-                opt_state=avg_fn(state.opt_state, constraint_fn))
+            opt = avg_fn(state.opt_state, constraint_fn)
+            if active is not None:
+                opt = where_active(active, opt, state.opt_state)
+            state = state._replace(opt_state=opt)
         return state._replace(params=params, comm_state=comm_state)
 
     return reduce
@@ -211,12 +229,22 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
                     microbatch: int = 1,
                     reducer: Optional[Any] = None,
                     plan: PlanLike = None,
-                    shards: Optional[Any] = None):
+                    shards: Optional[Any] = None,
+                    elastic: bool = False):
     """Build the jitted Hier-AVG round for an N-level reduction plan.
 
     round(state, round_batch) -> (state, metrics); round_batch leaves are
     shaped [*hier.batch_dims, pods, G, S, *per_learner_batch] — for the
     legacy 2-level plan that is the familiar [beta, K1, ...].
+
+    ``elastic=True`` builds the participation-masked round instead:
+    ``round(state, round_batch, active) -> (state, metrics)`` with
+    ``active`` a boolean ``[n_levels, pods, G, S]`` mask (level *i* of the
+    plan, innermost first, uses ``active[i]`` for every one of its fires
+    this round).  Absent learners contribute weight 0 to that level's
+    renormalized mean and keep their params and EF state untouched
+    (see ``_make_reduce``); metrics gain ``active_frac/<level>``.  With
+    an all-true mask the round is bit-identical to the dense build.
 
     ``plan`` — a ReductionPlan, a spec string
     ("local@4:cast:bfloat16/pod@8/global@16:topk:0.05"), or None to use
@@ -241,29 +269,64 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
                              microbatch=microbatch)
     p = resolve_plan(hier, reducer, plan, shards=shards)
     _reduce = _make_reduce(constraint_fn, sync_opt_state)
+    last = len(p.levels) - 1
 
-    def make_phase(inner, level: ReductionLevel, skipped: bool):
-        """scan ``inner`` over this level's leading batch dim, then apply
-        this level's reduction."""
-        def phase(state: TrainState, batches):
-            state, metrics = jax.lax.scan(inner, state, batches)
-            if not skipped:
-                state = _reduce(level, state)
+    if not elastic:
+        def make_phase(inner, level: ReductionLevel, skipped: bool):
+            """scan ``inner`` over this level's leading batch dim, then
+            apply this level's reduction."""
+            def phase(state: TrainState, batches):
+                state, metrics = jax.lax.scan(inner, state, batches)
+                if not skipped:
+                    state = _reduce(level, state)
+                return state, metrics
+            return phase
+
+        phase = sgd_step
+        for i, level in enumerate(p.levels):
+            phase = make_phase(phase, level, skip_local and i < last)
+
+        def round_fn(state: TrainState, round_batch):
+            state, metrics = phase(state, round_batch)
+            # metrics leaves: [*batch_dims, pods, G, S] -> scalar means
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
             return state, metrics
+
+        return round_fn
+
+    # elastic build: the per-level masks ride the scan carry next to the
+    # TrainState so every nesting depth sees them
+    def estep(carry, batch):
+        state, active = carry
+        state, metrics = sgd_step(state, batch)
+        return (state, active), metrics
+
+    def make_ephase(inner, level: ReductionLevel, skipped: bool, i: int):
+        def phase(carry, batches):
+            carry, metrics = jax.lax.scan(inner, carry, batches)
+            state, active = carry
+            if not skipped:
+                state = _reduce(level, state, active[i])
+            return (state, active), metrics
         return phase
 
-    phase = sgd_step
-    last = len(p.levels) - 1
+    ephase = estep
     for i, level in enumerate(p.levels):
-        phase = make_phase(phase, level, skip_local and i < last)
+        ephase = make_ephase(ephase, level, skip_local and i < last, i)
 
-    def round_fn(state: TrainState, round_batch):
-        state, metrics = phase(state, round_batch)
-        # metrics leaves: [*batch_dims, pods, G, S] -> scalar means
-        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+    def elastic_round_fn(state: TrainState, round_batch, active):
+        assert active.shape == (len(p.levels),) + tuple(
+            jax.tree.leaves(state.params)[0].shape[:3]), (
+            f"active mask must be [n_levels, pods, G, S] = "
+            f"{(len(p.levels),)} + learner grid, got {active.shape}")
+        (state, _), metrics = ephase((state, active), round_batch)
+        metrics = dict(jax.tree.map(lambda m: m.mean(), metrics))
+        for i, lvl in enumerate(p.levels):
+            metrics[f"active_frac/{lvl.name}"] = \
+                active[i].astype(jnp.float32).mean()
         return state, metrics
 
-    return round_fn
+    return elastic_round_fn
 
 
 # --------------------------------------------------------------------- #
@@ -276,8 +339,16 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
                    constraint_fn: Optional[Callable] = None,
                    reducer: Optional[Any] = None,
                    plan: PlanLike = None,
-                   shards: Optional[Any] = None):
+                   shards: Optional[Any] = None,
+                   elastic: bool = False):
     """Single-step variant: per-level counter masking on the step counter.
+
+    ``elastic=True`` builds ``step(state, batch, active)`` with ``active``
+    a boolean ``[n_levels, pods, G, S]`` participation mask; a firing
+    level reduces over its present learners only, and absent learners
+    keep their params/EF untouched (same semantics as the elastic
+    ``make_hier_round``).  An all-true mask is bit-identical to the
+    dense build.
 
     Level i fires when ``t % period_i == 0`` and the next level does NOT
     fire (an outer reduction subsumes all inner ones at the same step);
@@ -300,7 +371,11 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
     p = resolve_plan(hier, reducer, plan, shards=shards)
     last = len(p.levels) - 1
 
-    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+    def step(state: TrainState, batch, active=None
+             ) -> Tuple[TrainState, Dict]:
+        if elastic:
+            assert active is not None, \
+                "elastic step needs the [n_levels, pods, G, S] active mask"
         state, metrics = sgd_step(state, batch)
         t = state.step  # steps completed
         params, cs = state.params, state.comm_state
@@ -311,14 +386,21 @@ def make_hier_step(loss_fn: Callable, optimizer: Optimizer,
             if i < last:
                 fire = jnp.logical_and(
                     fire, (t % p.levels[i + 1].period) != 0)
-            avg_fn = (lambda lv: lambda tree, cf=None, specs=None:
-                      average_over(tree, lv.axes, cf, specs))(level)
+            mask = active[i] if elastic else None
+            avg_fn = (lambda lv, mk: lambda tree, cf=None, specs=None:
+                      average_over(tree, lv.axes, cf, specs, mk)
+                      )(level, mask)
             lvl_cs = cs[level.name] if level.reducer.stateful else ()
 
-            def reduce_branch(operand, level=level, avg_fn=avg_fn):
+            def reduce_branch(operand, level=level, avg_fn=avg_fn,
+                              mask=mask):
                 pp, lcs = operand
-                return reduce_with(level.reducer, avg_fn, pp, lcs,
-                                   constraint_fn)
+                out, ncs = reduce_with(level.reducer, avg_fn, pp, lcs,
+                                       constraint_fn)
+                if mask is not None:
+                    out = where_active(mask, out, pp)
+                    ncs = where_active(mask, ncs, lcs)
+                return out, ncs
 
             params, lvl_cs = jax.lax.cond(
                 fire, reduce_branch, lambda operand: operand,

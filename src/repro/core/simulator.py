@@ -32,6 +32,11 @@ class SimResult:
     eval_accs: np.ndarray
     grad_sq_norms: np.ndarray   # ||grad F(w~_n)||^2 proxy at global syncs
     state: TrainState
+    # elastic (faults=) runs only: per-round participation fraction per
+    # plan level [n_rounds, n_levels] and the modeled round wall seconds
+    # under that round's actual participation
+    active_fracs: Optional[np.ndarray] = None
+    round_wall_s: Optional[np.ndarray] = None
 
     @property
     def final_eval_acc(self) -> float:
@@ -51,7 +56,8 @@ class Simulator:
                  hier: HierAvgParams, optimizer: Optional[Optimizer] = None,
                  algo: str = "hier", per_learner_batch: int = 32,
                  eval_batch: Optional[Any] = None, seed: int = 0,
-                 reducer: Optional[Any] = None):
+                 reducer: Optional[Any] = None, faults: Optional[Any] = None,
+                 comm_model: Optional[Any] = None):
         self.loss_fn = loss_fn
         self.init_fn = init_fn
         self.sample = sample_batch
@@ -66,6 +72,28 @@ class Simulator:
         self.plan: ReductionPlan = resolve_plan(hier, reducer)
         # outermost level's reducer == the legacy single-reducer view
         self.reducer: Reducer = self.plan.levels[-1].reducer
+        # elastic membership: a FaultSchedule (or spec string — parsed
+        # against this plan's levels, with straggler deadlines priced
+        # from the CommModel level walls) drives per-round participation
+        # masks through the elastic round program
+        self.comm_model = comm_model
+        self.faults = None
+        if faults is not None:
+            if algo != "hier":
+                raise ValueError(
+                    f"fault injection needs the elastic hier round "
+                    f"program; algo={algo!r} does not take masks")
+            from repro.elastic import FaultSchedule, level_deadlines
+            if isinstance(faults, FaultSchedule):
+                self.faults = faults
+            else:
+                params1 = jax.eval_shape(
+                    self.init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32))
+                self.faults = FaultSchedule(
+                    faults, topo, [lvl.name for lvl in self.plan.levels],
+                    seed=seed,
+                    deadlines=level_deadlines(self.plan, topo, params1,
+                                              comm_model))
         # the round batch nest must match the round function actually
         # built: the baselines are 2-level rounds, so an N-level hier's
         # batch collapses to (1, steps) for them
@@ -73,7 +101,8 @@ class Simulator:
             else (1, hier.steps_per_round)
         if algo == "hier":
             rnd = make_hier_round(loss_fn, self.optimizer, hier,
-                                  reducer=reducer)
+                                  reducer=reducer,
+                                  elastic=self.faults is not None)
             self._batch_dims = self.plan.batch_dims
             self._init_plan = self.plan
         elif algo == "kavg":
@@ -125,15 +154,51 @@ class Simulator:
         return {lvl.name: lvl.reducer.payload_bytes(params1)
                 for lvl in self.plan.levels}
 
+    def round_wall_estimate(self, fracs) -> float:
+        """Modeled wall seconds of one round whose per-level participation
+        fractions were ``fracs`` (aligned with ``plan.levels``): each
+        level's billable count times its scheduled wall at an effective
+        drop probability of ``1 - frac`` (core/theory.py n_eff billing).
+        Memoized on the fraction tuple — a fleet takes few distinct
+        participation patterns, and repricing every round would dominate
+        small-model round wall."""
+        from repro.core.theory import level_reduction_seconds
+        key = tuple(round(float(f), 6) for f in fracs)
+        cache = getattr(self, "_wall_cache", None)
+        if cache is None:
+            cache = self._wall_cache = {}
+        if key in cache:
+            return cache[key]
+        params1 = jax.eval_shape(self.init_fn,
+                                 jax.ShapeDtypeStruct((2,), jnp.uint32))
+        counts = dict(self.plan.counts_per_round())
+        wall = 0.0
+        for lvl, f in zip(self.plan.levels, key):
+            wall += counts[lvl.name] * level_reduction_seconds(
+                lvl, self.topo, params1, self.comm_model,
+                drop_prob=1.0 - f)[2]
+        cache[key] = wall
+        return wall
+
     def run(self, n_rounds: int, key=None) -> SimResult:
         key = self.key if key is None else key
         k_init, key = jax.random.split(key)
         state = init_state(self.topo, self.init_fn, self.optimizer, k_init,
                            plan=self._init_plan)
         losses, accs, elosses, eaccs, gsq = [], [], [], [], []
+        fracs, walls = [], []
         for r in range(n_rounds):
             key, kb = jax.random.split(key)
-            state, metrics = self.round_fn(state, self._round_batch(kb))
+            if self.faults is not None:
+                active = jnp.asarray(self.faults.active(r))
+                state, metrics = self.round_fn(
+                    state, self._round_batch(kb), active)
+                f = [float(metrics[f"active_frac/{lvl.name}"])
+                     for lvl in self.plan.levels]
+                fracs.append(f)
+                walls.append(self.round_wall_estimate(f))
+            else:
+                state, metrics = self.round_fn(state, self._round_batch(kb))
             losses.append(float(metrics["loss"]))
             accs.append(float(metrics.get("accuracy", jnp.nan)))
             p1 = unstack_first(state.params)
@@ -144,7 +209,9 @@ class Simulator:
                 gsq.append(float(self._gsq(p1, self.eval_batch)))
         return SimResult(np.array(losses), np.array(accs),
                          np.array(elosses), np.array(eaccs),
-                         np.array(gsq), state)
+                         np.array(gsq), state,
+                         active_fracs=np.array(fracs) if fracs else None,
+                         round_wall_s=np.array(walls) if walls else None)
 
 
 def run_algo_comparison(loss_fn, init_fn, sample_batch, eval_batch, *,
@@ -159,6 +226,7 @@ def run_algo_comparison(loss_fn, init_fn, sample_batch, eval_batch, *,
                         optimizer=spec.get("optimizer"),
                         algo=spec.get("algo", "hier"),
                         reducer=spec.get("reducer"),
+                        faults=spec.get("faults"),
                         per_learner_batch=per_learner_batch,
                         eval_batch=eval_batch, seed=seed)
         out[name] = sim.run(n_rounds)

@@ -184,16 +184,38 @@ class CommModel:
                     return bw
         return self.compress_bw
 
-    def allreduce_time(self, bytes_: float, n: int, bw: float) -> float:
+    def allreduce_time(self, bytes_: float, n: float, bw: float) -> float:
+        """``n`` may be fractional: expected-cost billing under elastic
+        membership passes :func:`effective_participants` — the ring
+        formula is smooth in n, and n_eff -> 1 correctly drives the bill
+        to zero (a one-survivor group reduces with nobody)."""
         if n <= 1:
             return 0.0
-        steps = 2 * (n - 1)
+        steps = 2.0 * (n - 1)
         return 2.0 * bytes_ * (n - 1) / (n * bw) + steps * self.latency
 
     def bw_for_level(self, axes, pods: int) -> float:
         """Link tier a plan level rides (see :func:`tier_for`)."""
         return self.slow_bw if tier_for(axes, pods) == "dci" \
             else self.fast_bw
+
+
+def effective_participants(n: int, drop_prob: float = 0.0) -> float:
+    """Expected ring size of a grouped reduction whose members each miss
+    the fire independently with probability ``drop_prob``:
+    ``n_eff = 1 + (n - 1)(1 - p)``.
+
+    The masked reduction always runs *as if* from one anchor's
+    perspective — a group never shrinks below its own survivor — so the
+    expected number of OTHER contributors is ``(n-1)(1-p)``, and the
+    ring terms of :meth:`CommModel.allreduce_time` scale with exactly
+    that count.  ``p=0`` recovers ``n`` (dense billing, bit-identical
+    plan scores); ``p=1`` gives 1 (no wire cost at all).  This is how
+    ``plan_comm_per_round(..., drop_prob=)`` prices an unreliable tier
+    for ``CostAwarePlan``/``--autotune``.
+    """
+    p = min(1.0, max(0.0, float(drop_prob)))
+    return 1.0 + (n - 1) * (1.0 - p)
 
 
 def comm_per_k2_steps(model_bytes: float, hier_k1: int, hier_k2: int,
@@ -238,6 +260,11 @@ class LevelCost:
                              # the fill/drain ramp; serial levels pay the
                              # sum.  Compare against seconds_per_round +
                              # compute_s (the serial wall) for the win.
+    drop_prob: float = 0.0   # per-member miss probability this level was
+                             # billed under (elastic expected-cost mode)
+    n_eff: float = 0.0       # effective_participants(participants,
+                             # drop_prob) the ring terms used (0 means
+                             # dense billing: n_eff == participants)
 
     @property
     def overlap_speedup(self) -> float:
@@ -264,7 +291,8 @@ def scheduled_wall(stage_compute: float, stage_comm: float, messages: int,
 
 
 def level_reduction_seconds(lvl, topo, template,
-                            cm: Optional[CommModel] = None
+                            cm: Optional[CommModel] = None, *,
+                            drop_prob: float = 0.0
                             ) -> Tuple[float, float, float]:
     """The bill of ONE reduction at plan level ``lvl`` on ``topo``:
     ``(comm_s, compute_s, scheduled_wall_s)`` — schedule-count
@@ -277,7 +305,13 @@ def level_reduction_seconds(lvl, topo, template,
     ``scheduled_wall_s`` what the level's actual schedule pays
     (:func:`scheduled_wall`: pipelined levels overlap compute against
     comm per bucket stage).  :func:`plan_comm_per_round` multiplies
-    these by the billable count per round."""
+    these by the billable count per round.
+
+    ``drop_prob`` — expected-cost billing under elastic membership: the
+    ring terms run at ``effective_participants(n, drop_prob)`` instead of
+    the dense ``n`` (codec compute is unchanged — survivors still
+    compress their full bucket).  ``drop_prob=0`` bills identically to
+    before."""
     import jax
     import jax.numpy as jnp
     cm = cm or CommModel()
@@ -290,11 +324,12 @@ def level_reduction_seconds(lvl, topo, template,
     dense_bytes = int(sum(
         leaf.size * jnp.dtype(leaf.dtype).itemsize
         for leaf in jax.tree.leaves(template)))
+    n_eff = effective_participants(n, drop_prob)
     # the RS+AG decomposition of a sharded bucket walks the same
     # 2(n-1)-step ring as the fused all-reduce, so the ring formula
     # applies verbatim with the per-device wire bytes
-    comm_s = cm.allreduce_time(wire, n, bw) \
-        + (messages - 1) * 2 * (n - 1) * cm.latency
+    comm_s = cm.allreduce_time(wire, n_eff, bw) \
+        + (messages - 1) * 2.0 * (n_eff - 1) * cm.latency
     stage_compute = (dense_bytes / messages
                      / cm.compress_bw_for(getattr(lvl.reducer,
                                                   "codec_name", None))
@@ -324,8 +359,9 @@ def param_template(n_params: int, dtype="bfloat16", n_leaves: int = 1):
     return {f"params{i}": struct for i in range(n_leaves)}
 
 
-def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
-                        ) -> Tuple[LevelCost, ...]:
+def plan_comm_per_round(plan, topo, template,
+                        cm: Optional[CommModel] = None, *,
+                        drop_prob=0.0) -> Tuple[LevelCost, ...]:
     """Cost every level of a ReductionPlan over its own link tier and its
     own *compressed* payload.
 
@@ -354,6 +390,13 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
     comm (drain), and ``max(compute, comm)`` for every stage in between —
     instead of the serial ``sum`` for every stage.  With one message
     there is nothing to overlap and both forms coincide.
+
+    ``drop_prob`` — expected-cost billing for unreliable fleets: a scalar
+    per-member miss probability applied to every level, or a mapping
+    ``{level_name: p}`` (levels not named bill dense).  Each level's ring
+    terms then run at ``effective_participants(n, p)``; the resulting
+    ``LevelCost`` records both ``drop_prob`` and ``n_eff`` so autotune
+    reports can show what the score assumed.
     """
     cm = cm or CommModel()
     counts = dict(plan.counts_per_round())
@@ -362,18 +405,21 @@ def plan_comm_per_round(plan, topo, template, cm: Optional[CommModel] = None
         n = 1
         for a in lvl.axes:
             n *= topo.shape[a]
+        p = (drop_prob.get(lvl.name, 0.0) if hasattr(drop_prob, "get")
+             else float(drop_prob))
         payload = lvl.reducer.payload_bytes(template)
         wire = lvl.reducer.wire_payload_bytes(template)
         messages = lvl.reducer.n_messages(template)
         bw = cm.bw_for_level(lvl.axes, topo.pods)
         count = counts[lvl.name]
         comm_s, compute_s, wall_s = level_reduction_seconds(
-            lvl, topo, template, cm)
+            lvl, topo, template, cm, drop_prob=p)
         out.append(LevelCost(lvl.name, n, lvl.period, payload, count, bw,
                              count * comm_s, messages, wire_bytes=wire,
                              compute_s=count * compute_s,
                              codec=getattr(lvl.reducer, "codec_name", ""),
-                             overlap_s=count * wall_s))
+                             overlap_s=count * wall_s, drop_prob=p,
+                             n_eff=effective_participants(n, p)))
     return tuple(out)
 
 

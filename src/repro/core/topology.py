@@ -91,7 +91,7 @@ def unstack_first(tree):
     return jax.tree.map(lambda x: x[0, 0, 0], tree)
 
 
-def _scatter_mean(x, sharding, axes: Tuple[int, ...]):
+def _scatter_mean(x, sharding, axes: Tuple[int, ...], denom=None):
     """The grouped learner-axis mean of one bucket, lowered explicitly to
     reduce-scatter + all-gather instead of a full all-reduce.
 
@@ -103,7 +103,16 @@ def _scatter_mean(x, sharding, axes: Tuple[int, ...]):
     bit of the result — is identical to the all-reduce lowering; the run
     length must tile over the reduced axes (BucketLayout pads for this).
     Returns None when the mesh/spec cannot take the scatter path (caller
-    falls back to the plain mean)."""
+    falls back to the plain mean).
+
+    ``denom`` — participation-masked (elastic) reductions pass the
+    already-*weighted* bucket as ``x`` and the per-group survivor counts
+    (broadcastable to ``x``, clipped >= 1) as ``denom``; the division then
+    happens AFTER the gather, outside the shard_map block.  Elementwise
+    division commutes with ``all_gather``, so at full participation
+    (``denom == n`` everywhere) the result is bit-identical to the
+    unmasked path — masking rides the same collectives, in wire space.
+    """
     from jax.experimental.shard_map import shard_map
 
     mesh = sharding.mesh
@@ -134,18 +143,29 @@ def _scatter_mean(x, sharding, axes: Tuple[int, ...]):
         s = xb
         for a in reversed(active):           # minor axis first, like GSPMD
             s = jax.lax.psum_scatter(s, a, scatter_dimension=d, tiled=True)
-        m = s / n
+        if denom is None:
+            s = s / n
         for a in active:
-            m = jax.lax.all_gather(m, a, axis=d, tiled=True)
-        return m
+            s = jax.lax.all_gather(s, a, axis=d, tiled=True)
+        return s
 
     pspec = jax.sharding.PartitionSpec(*spec)
-    return shard_map(blk, mesh=mesh, in_specs=pspec, out_specs=pspec,
-                     check_rep=False)(x)
+    out = shard_map(blk, mesh=mesh, in_specs=pspec, out_specs=pspec,
+                    check_rep=False)(x)
+    if denom is not None:
+        out = out / denom.astype(out.dtype)
+    return out
+
+
+def _mask_weights(mask, ndim: int, dtype):
+    """The mask as multiplicative weights aligned to an ``ndim``-dim
+    stacked leaf: ``[pods, G, S]`` broadcast over the trailing dims."""
+    w = mask.astype(dtype)
+    return w.reshape(w.shape + (1,) * (ndim - w.ndim))
 
 
 def average_over(tree, axes: Tuple[int, ...], constraint_fn=None,
-                 bucket_specs=None):
+                 bucket_specs=None, mask=None):
     """Mean over stacked learner axes, broadcast back (== grouped all-reduce).
 
     ``constraint_fn(leaf) -> leaf`` optionally re-pins the sharding after the
@@ -161,11 +181,30 @@ def average_over(tree, axes: Tuple[int, ...], constraint_fn=None,
     keep the plain mean.  The specs pin the output placement, so
     ``constraint_fn`` is not applied on this path — the launcher's
     constraint targets param-shaped trees, not packed buckets.
+
+    ``mask`` — elastic membership (repro/elastic): a boolean ``[pods, G,
+    S]`` participation mask; absent learners contribute weight 0 and the
+    sum renormalizes by the per-group survivor count, so the result is
+    the mean over the *present* members of each group.  A group with no
+    survivors divides by a clipped count of 1 and yields 0 — never NaN —
+    and the caller (core/hier_avg.py ``where_active``) discards that
+    value by keeping absent learners' own params.  At full participation
+    the weights are exactly 1.0 and the counts exactly n, so masked ==
+    unmasked bit-for-bit (test-enforced, all engines).  On the
+    ``bucket_specs`` path the weighting is applied in *wire space*
+    (weights broadcast over the ``[F, run]`` payload dims) before the
+    reduce-scatter, so fsdp>1 layouts mask through the same RS/AG
+    collectives.
     """
     def avg(x):
-        m = jnp.mean(x, axis=axes, keepdims=True)
-        y = jnp.broadcast_to(m, x.shape)
-        return y
+        if mask is not None:
+            w = _mask_weights(mask, x.ndim, x.dtype)
+            c = jnp.sum(w, axis=axes, keepdims=True)
+            s = jnp.sum(x * w, axis=axes, keepdims=True)
+            m = s / jnp.maximum(c, 1)        # all-absent group: 0, not NaN
+        else:
+            m = jnp.mean(x, axis=axes, keepdims=True)
+        return jnp.broadcast_to(m, x.shape)
 
     if bucket_specs is not None:
         leaves, treedef = jax.tree.flatten(tree)
@@ -174,7 +213,14 @@ def average_over(tree, axes: Tuple[int, ...], constraint_fn=None,
             f"{len(specs)} bucket specs for {len(leaves)} bucket leaves"
         out = []
         for x, s in zip(leaves, specs):
-            y = _scatter_mean(x, s, axes) if s is not None else None
+            if s is None:
+                y = None
+            elif mask is not None:
+                w = _mask_weights(mask, x.ndim, x.dtype)
+                c = jnp.maximum(jnp.sum(w, axis=axes, keepdims=True), 1)
+                y = _scatter_mean(x * w, s, axes, denom=c)
+            else:
+                y = _scatter_mean(x, s, axes)
             out.append(avg(x) if y is None else y)
         return treedef.unflatten(out)
 
@@ -184,17 +230,52 @@ def average_over(tree, axes: Tuple[int, ...], constraint_fn=None,
     return out
 
 
-def local_average(tree, constraint_fn=None, bucket_specs=None):
+def where_active(mask, new_tree, old_tree):
+    """Per-learner select: active learners take ``new_tree``, absent ones
+    keep ``old_tree`` — how elastic rounds (core/hier_avg.py) keep an
+    absent learner's params AND its EF/``comm_state`` untouched across a
+    missed fire.
+
+    ``mask`` is the boolean ``[pods, G, S]`` participation mask.  Leaf
+    alignment is by shape: leaves carrying the full stacked lead
+    (``shape[:3] == mask.shape`` — params, opt state, param/bucket-space
+    EF) select per learner; codec-view leaves of shard-aware bucket
+    layouts (``[pods, G, S*F, ...]`` — shards merged into the local axis,
+    comm/bucket.py) repeat each learner's bit over its F shard rows; all
+    other leaves (PRNG keys, scalars) take ``new`` — they are global
+    streams, not per-learner state.  With an all-true mask every branch
+    returns ``new`` exactly, preserving full-participation bit-identity.
+    """
+    pg, s = mask.shape[:2], mask.shape[2]
+
+    def sel(new, old):
+        shape = tuple(getattr(new, "shape", ()))
+        if len(shape) >= 3 and shape[:3] == tuple(mask.shape):
+            m = mask
+        elif (len(shape) >= 3 and shape[:2] == tuple(pg)
+                and shape[2] != s and shape[2] % s == 0):
+            m = jnp.repeat(mask, shape[2] // s, axis=2)   # codec view S*F
+        else:
+            return new
+        return jnp.where(_mask_weights(m, len(shape), jnp.bool_), new, old)
+
+    return jax.tree.map(sel, new_tree, old_tree)
+
+
+def local_average(tree, constraint_fn=None, bucket_specs=None, mask=None):
     """The paper's local reduction: mean within each cluster of S learners."""
-    return average_over(tree, LOCAL_ARRAY_AXES, constraint_fn, bucket_specs)
+    return average_over(tree, LOCAL_ARRAY_AXES, constraint_fn, bucket_specs,
+                        mask)
 
 
-def global_average(tree, constraint_fn=None, bucket_specs=None):
+def global_average(tree, constraint_fn=None, bucket_specs=None, mask=None):
     """The paper's global reduction: mean over all P learners."""
-    return average_over(tree, GLOBAL_ARRAY_AXES, constraint_fn, bucket_specs)
+    return average_over(tree, GLOBAL_ARRAY_AXES, constraint_fn, bucket_specs,
+                        mask)
 
 
-def pod_average(tree, constraint_fn=None, bucket_specs=None):
+def pod_average(tree, constraint_fn=None, bucket_specs=None, mask=None):
     """Beyond-paper: intra-pod reduction (axes group+local, not pod) —
     a middle hierarchy level matching the ICI/DCI boundary."""
-    return average_over(tree, POD_ARRAY_AXES, constraint_fn, bucket_specs)
+    return average_over(tree, POD_ARRAY_AXES, constraint_fn, bucket_specs,
+                        mask)

@@ -70,6 +70,17 @@ def main() -> None:
                          "runs the cost-aware plan search over the real "
                          "param tree and trains the recommended plan — "
                          "wins over --plan/--k1/--k2")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="elastic membership: a deterministic fault "
+                         "schedule (repro/elastic) driving per-round "
+                         "participation masks, e.g. "
+                         "'crash:0.02/flaky:pod:0.2:3/straggler:0.1:1.5' "
+                         "— seeded by --seed, straggler deadlines priced "
+                         "from the CommModel level walls")
+    ap.add_argument("--drop-prob", type=float, default=0.0,
+                    help="expected per-member miss probability the "
+                         "--autotune plan search bills rounds under "
+                         "(theory.py n_eff billing; 0 = dense)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -110,8 +121,11 @@ def main() -> None:
                               B=args.batch,
                               T_ref=args.rounds * hier.steps_per_round,
                               bucket_bytes=hier.bucket_bytes,
-                              overlap=hier.overlap, top=3)
-        print(f"autotune [{args.autotune}; fitted {list(cal.fitted)}]:")
+                              overlap=hier.overlap, top=3,
+                              drop_prob=args.drop_prob)
+        print(f"autotune [{args.autotune}; fitted {list(cal.fitted)}"
+              + (f"; drop_prob={args.drop_prob:g}" if args.drop_prob
+                 else "") + "]:")
         for i, sp in enumerate(ranked):
             print(f"  #{i} {sp.spec}  comm_ms/step="
                   f"{sp.comm_s_per_step * 1e3:.3f} score={sp.score:.3e} "
@@ -128,23 +142,55 @@ def main() -> None:
 
     loader = HierDataLoader(sample, topo=topo, hier=hier,
                             per_learner_batch=args.batch, seed=args.seed)
+    faults = None
+    if args.faults:
+        from repro.core.theory import level_reduction_seconds
+        from repro.elastic import FaultSchedule, level_deadlines
+        template = jax.eval_shape(
+            bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        deadlines = level_deadlines(plan, topo, template, None)
+        faults = FaultSchedule(args.faults, topo,
+                               [lvl.name for lvl in plan.levels],
+                               seed=args.seed, deadlines=deadlines)
+        counts = dict(plan.counts_per_round())
+
+        def round_wall(fracs):
+            return sum(
+                counts[lvl.name] * level_reduction_seconds(
+                    lvl, topo, template, None,
+                    drop_prob=1.0 - float(f))[2]
+                for lvl, f in zip(plan.levels, fracs))
+
     # donate the carried TrainState (params/opt_state/EF update in place —
     # no doubled peak memory); the loop only ever uses the returned state
     round_fn = jax.jit(make_hier_round(bundle.loss_fn, optimizer, hier,
-                                       shards=shards),
+                                       shards=shards,
+                                       elastic=faults is not None),
                        donate_argnums=(0,))
     state = init_state(topo, bundle.init, optimizer, key, plan=plan,
                        shards=shards)
 
     print(f"Hier-AVG: {topo.describe()}  plan={plan.describe()} "
-          f"arch={cfg.name}")
+          f"arch={cfg.name}"
+          + (f"  faults={faults.describe()}" if faults else ""))
     for r in range(args.rounds):
         t0 = time.time()
-        state, metrics = round_fn(state, loader.next_round())
+        if faults is not None:
+            state, metrics = round_fn(state, loader.next_round(),
+                                      jnp.asarray(faults.active(r)))
+            fracs = [float(metrics[f"active_frac/{lvl.name}"])
+                     for lvl in plan.levels]
+            extra = ("  active=" + "/".join(
+                f"{lvl.name}:{f:.2f}" for lvl, f in zip(plan.levels, fracs))
+                + f" wall~{round_wall(fracs) * 1e3:.2f}ms")
+        else:
+            state, metrics = round_fn(state, loader.next_round())
+            extra = ""
         print(f"round {r:3d}  loss={float(metrics['loss']):.4f} "
               f"acc={float(metrics.get('accuracy', jnp.nan)):.3f} "
               f"({time.time()-t0:.1f}s, "
-              f"{loader.tokens_per_round * args.seq} tokens)", flush=True)
+              f"{loader.tokens_per_round * args.seq} tokens)"
+              + extra, flush=True)
 
     if args.ckpt:
         save_checkpoint(args.ckpt, unstack_first(state.params),
