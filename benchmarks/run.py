@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping:
   bench_elastic     -> elastic membership: 20%-dropout convergence vs the
                        Thm 3.2 bars, masked-reduction overhead, fleet
                        reshape round-trip, fault determinism (elastic/)
+  bench_telemetry   -> telemetry plane: gradstats bit-identity on the
+                       serial/pipelined/fsdp=2 engines, logger host
+                       overhead, measured-vs-modeled reduction walls,
+                       Chrome-trace + JSONL round-trips (telemetry/)
   roofline          -> §Roofline rows from the dry-run artifacts (if present)
 
 ``bench_bucketing`` additionally writes machine-readable
@@ -41,7 +45,13 @@ fault-free vs 20%-pod-dropout convergence pair with loss_gap /
 thm32_bar / within_bars, the masked-overhead A/B, the 4->6->4 reshape
 round-trip flags, and the cross-process fault-schedule hash); CI runs
 its smoke and asserts within_bars, determinism, and the reshape
-bit-preservation flags.
+bit-preservation flags.  ``bench_telemetry`` writes
+``BENCH_telemetry.json`` (the three per-engine bit_identical flags, the
+logger host-overhead A/B vs its documented ceiling, the
+measured-vs-modeled wall agreement with per-point rel errors, and the
+trace/JSONL round-trip flags); CI runs its smoke and asserts
+bit-identity on every engine, the overhead ceiling, within_tolerance,
+and the export flags.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig1] [--smoke]
 """
@@ -80,7 +90,8 @@ def main() -> None:
                             bench_bucketing, bench_comm, bench_compression,
                             bench_elastic, bench_k1_s, bench_k2,
                             bench_large_proxy, bench_layouts,
-                            bench_serving, bench_vs_kavg, roofline)
+                            bench_serving, bench_telemetry, bench_vs_kavg,
+                            roofline)
     suites = [
         ("bench_k2", bench_k2.run),
         ("bench_k1_s", bench_k1_s.run),
@@ -98,6 +109,8 @@ def main() -> None:
          lambda: bench_serving.run(smoke=args.smoke)),
         ("bench_elastic",
          lambda: bench_elastic.run(smoke=args.smoke)),
+        ("bench_telemetry",
+         lambda: bench_telemetry.run(smoke=args.smoke)),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")
@@ -116,7 +129,9 @@ def main() -> None:
         records = {"bench_bucketing": (bench_bucketing, "BENCH_reduction"),
                    "bench_autotune": (bench_autotune, "BENCH_autotune"),
                    "bench_serving": (bench_serving, "BENCH_serving"),
-                   "bench_elastic": (bench_elastic, "BENCH_elastic")}
+                   "bench_elastic": (bench_elastic, "BENCH_elastic"),
+                   "bench_telemetry": (bench_telemetry,
+                                       "BENCH_telemetry")}
         if name in records and records[name][0].RECORDS:
             # smoke runs go to a sibling file so they never clobber the
             # checked-in full-round snapshot (README "Bucketed reductions")

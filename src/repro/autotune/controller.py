@@ -32,8 +32,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple, Union
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
 from repro.autotune.calibrate import Calibration, resolve_comm_model
 from repro.comm import DEFAULT_BUCKET_BYTES
@@ -43,6 +44,11 @@ from repro.core.schedules import AdaptivePlan
 from repro.core.theory import (CommModel, level_reduction_seconds,
                                param_template)
 from repro.core.topology import HierTopology
+
+
+# bounded window of ingested telemetry rows (observe): enough to settle
+# a median past warm-up noise, small enough to track a drifting fleet
+OBS_WINDOW = 64
 
 
 def _pow2_gap(ratio: float, max_gap: int) -> int:
@@ -125,6 +131,9 @@ class CostAwarePlan:
                            if hasattr(self.drop_prob, "get")
                            else float(self.drop_prob)))[2]
             for lvl in resolved.levels)
+        # runtime observations (telemetry train_round rows via observe)
+        self._obs_walls: deque = deque(maxlen=OBS_WINDOW)
+        self._obs_fracs: Dict[str, deque] = {}
 
     @property
     def level_costs(self) -> Tuple[float, ...]:
@@ -170,3 +179,54 @@ class CostAwarePlan:
     def reset(self) -> None:
         """Forget the ladder's loss anchor (new run)."""
         self._ladder.reset()
+
+    # ------------------------------------------------------------ #
+    # live telemetry ingestion (repro/telemetry — the first consumer)
+
+    def observe(self, row: Mapping) -> None:
+        """Ingest one measured ``train_round`` telemetry row
+        (telemetry/metrics.py schema): the measured round ``wall_s`` and
+        the per-level ``active_frac`` land in bounded windows so
+        measured-vs-modeled wall (and live participation) are queryable
+        at runtime.  Closing the loop — re-deriving ``drop_prob`` /
+        periods from these windows — is the ROADMAP online-control
+        follow-up; this is the signal path it plugs into."""
+        w = row.get("wall_s")
+        if w is not None and float(w) > 0.0:
+            self._obs_walls.append(float(w))
+        for name, f in (row.get("active_frac") or {}).items():
+            self._obs_fracs.setdefault(
+                name, deque(maxlen=OBS_WINDOW)).append(float(f))
+
+    @property
+    def observed_wall_s(self) -> Optional[float]:
+        """Median measured round wall over the observation window
+        (None until the first row; the median rides out the compile
+        round and scheduler spikes)."""
+        if not self._obs_walls:
+            return None
+        s = sorted(self._obs_walls)
+        return s[len(s) // 2]
+
+    @property
+    def observed_active_frac(self) -> Dict[str, float]:
+        """Mean observed participation fraction per level name."""
+        return {n: sum(d) / len(d)
+                for n, d in self._obs_fracs.items() if d}
+
+    @property
+    def modeled_round_wall_s(self) -> float:
+        """The calibrated COMM bill of one round of ``plan``: billable
+        reduction count x scheduled wall per level (no SGD compute —
+        compare against ``observed_wall_s`` knowing measured walls
+        include the compute the model does not bill)."""
+        counts = dict(self.plan.counts_per_round())
+        return sum(counts[lvl.name] * c
+                   for lvl, c in zip(self.plan.levels, self._level_costs))
+
+    def wall_bias(self) -> Optional[float]:
+        """measured / modeled round wall (None until observed); the
+        ratio a re-planner would scale the analytic bill by."""
+        w = self.observed_wall_s
+        m = self.modeled_round_wall_s
+        return None if (w is None or m <= 0.0) else w / m

@@ -127,13 +127,18 @@ def stacked_grad_fn(loss_fn: Callable):
 
 def make_sgd_step(loss_fn: Callable, optimizer: Optimizer,
                   grad_postprocess: Optional[Callable] = None,
-                  microbatch: int = 1):
+                  microbatch: int = 1,
+                  grad_observer: Optional[Callable] = None):
     """One local SGD step on all learners concurrently.
 
     ``microbatch > 1`` splits each learner's per-step batch (dim 3 of every
     leaf, after the [pods, G, S] axes) into that many slices and accumulates
     gradients over a ``lax.scan`` — activation memory drops by the factor,
     FLOPs unchanged.
+
+    ``grad_observer`` (telemetry/gradstats.py): a pure function of the
+    stacked per-learner gradients returning extra scalar metrics keys —
+    a read-only tap, the update itself is untouched.
     """
     grad_fn = stacked_grad_fn(loss_fn)
 
@@ -168,6 +173,9 @@ def make_sgd_step(loss_fn: Callable, optimizer: Optimizer,
             grads, metrics = one_shot(state, batch)
         else:
             grads, metrics = accumulated(state, batch)
+        if grad_observer is not None:
+            metrics = dict(metrics)
+            metrics.update(grad_observer(grads))
         if grad_postprocess is not None:
             grads = grad_postprocess(grads)
         params, opt_state = optimizer.update(grads, state.params,
@@ -230,7 +238,8 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
                     reducer: Optional[Any] = None,
                     plan: PlanLike = None,
                     shards: Optional[Any] = None,
-                    elastic: bool = False):
+                    elastic: bool = False,
+                    telemetry: Any = None):
     """Build the jitted Hier-AVG round for an N-level reduction plan.
 
     round(state, round_batch) -> (state, metrics); round_batch leaves are
@@ -264,10 +273,25 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
     ``shards`` (parallel/sharding.py ShardPlan): fsdp>1 meshes pack
     buckets shard-locally and lower each level's mean to
     reduce-scatter + all-gather; pass the same plan to ``init_state``.
+
+    ``telemetry`` (repro/telemetry): ``True`` or a ``TelemetryConfig``
+    adds device-side statistics to the round's metrics as cheap ``jnp``
+    reductions — per-level pre/post-average parameter divergence (the
+    Thm-3.2 discrepancy), cross-learner gradient-norm variance (the
+    Jiang & Agrawal period trigger), EF residual mass, and codec
+    compression error (``telemetry/...`` keys).  Pure observers: the
+    training trajectory is bit-identical to ``telemetry=None``
+    (gated by benchmarks/bench_telemetry.py).
     """
-    sgd_step = make_sgd_step(loss_fn, optimizer, grad_postprocess,
-                             microbatch=microbatch)
+    from repro.telemetry.gradstats import (level_stats,
+                                           make_grad_observer,
+                                           resolve_telemetry)
+    tcfg = resolve_telemetry(telemetry)
     p = resolve_plan(hier, reducer, plan, shards=shards)
+    sgd_step = make_sgd_step(loss_fn, optimizer, grad_postprocess,
+                             microbatch=microbatch,
+                             grad_observer=make_grad_observer(
+                                 tcfg, p.levels) if tcfg else None)
     _reduce = _make_reduce(constraint_fn, sync_opt_state)
     last = len(p.levels) - 1
 
@@ -278,7 +302,13 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
             def phase(state: TrainState, batches):
                 state, metrics = jax.lax.scan(inner, state, batches)
                 if not skipped:
+                    pre = state.params if tcfg is not None else None
                     state = _reduce(level, state)
+                    if tcfg is not None:
+                        metrics = dict(metrics)
+                        metrics.update(level_stats(
+                            tcfg, level, pre, state.params,
+                            state.comm_state))
                 return state, metrics
             return phase
 
@@ -306,7 +336,15 @@ def make_hier_round(loss_fn: Callable, optimizer: Optimizer,
             carry, metrics = jax.lax.scan(inner, carry, batches)
             state, active = carry
             if not skipped:
+                pre = state.params if tcfg is not None else None
                 state = _reduce(level, state, active[i])
+                if tcfg is not None:
+                    # absent learners keep their (stale) params and
+                    # count toward divergence — informative, not a bug
+                    metrics = dict(metrics)
+                    metrics.update(level_stats(
+                        tcfg, level, pre, state.params,
+                        state.comm_state))
             return (state, active), metrics
         return phase
 

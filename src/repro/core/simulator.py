@@ -8,6 +8,7 @@ the convergence tests.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -37,6 +38,12 @@ class SimResult:
     # under that round's actual participation
     active_fracs: Optional[np.ndarray] = None
     round_wall_s: Optional[np.ndarray] = None
+    # metrics= runs only: measured per-round wall seconds (the round is
+    # fenced with block_until_ready — the documented telemetry cost)
+    measured_wall_s: Optional[np.ndarray] = None
+    # telemetry= runs only: per-round means of every device-side
+    # ``telemetry/...`` stat key (gradstats.py), [n_rounds] each
+    stats: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def final_eval_acc(self) -> float:
@@ -57,7 +64,8 @@ class Simulator:
                  algo: str = "hier", per_learner_batch: int = 32,
                  eval_batch: Optional[Any] = None, seed: int = 0,
                  reducer: Optional[Any] = None, faults: Optional[Any] = None,
-                 comm_model: Optional[Any] = None):
+                 comm_model: Optional[Any] = None,
+                 telemetry: Any = None, metrics: Optional[Any] = None):
         self.loss_fn = loss_fn
         self.init_fn = init_fn
         self.sample = sample_batch
@@ -99,10 +107,21 @@ class Simulator:
         # batch collapses to (1, steps) for them
         legacy_dims = hier.batch_dims if len(hier.batch_dims) == 2 \
             else (1, hier.steps_per_round)
+        # telemetry= (repro/telemetry gradstats knob, hier only) adds
+        # device-side stat keys; metrics= (a MetricsLogger) receives one
+        # structured train_round row per round, with the round fenced so
+        # its wall is measured (the documented opt-in cost)
+        self.telemetry = telemetry
+        self.metrics = metrics
+        if telemetry and algo != "hier":
+            raise ValueError(
+                f"telemetry= needs the hier round program; algo={algo!r} "
+                f"has no per-level reduction to instrument")
         if algo == "hier":
             rnd = make_hier_round(loss_fn, self.optimizer, hier,
                                   reducer=reducer,
-                                  elastic=self.faults is not None)
+                                  elastic=self.faults is not None,
+                                  telemetry=telemetry)
             self._batch_dims = self.plan.batch_dims
             self._init_plan = self.plan
         elif algo == "kavg":
@@ -181,37 +200,84 @@ class Simulator:
         return wall
 
     def run(self, n_rounds: int, key=None) -> SimResult:
+        # Per-round scalars are BUFFERED as device arrays and fetched
+        # with ONE jax.device_get at the end — the old per-key float()
+        # calls forced a blocking device->host transfer per metric per
+        # round (the PR-10 host-sync hotspot).  Participation fractions
+        # come from the host-side FaultSchedule mask (no device read).
+        # The jit donates the carried state, never the metrics, so held
+        # metric buffers stay valid across rounds.  With a metrics=
+        # logger attached each round is fenced (block_until_ready) to
+        # measure its wall — that serialization is the logger's
+        # documented cost, off by default.
         key = self.key if key is None else key
         k_init, key = jax.random.split(key)
         state = init_state(self.topo, self.init_fn, self.optimizer, k_init,
                            plan=self._init_plan)
-        losses, accs, elosses, eaccs, gsq = [], [], [], [], []
-        fracs, walls = [], []
+        dev_rounds, dev_evals = [], []
+        fracs, walls, measured = [], [], []
+        observe = self.metrics is not None
         for r in range(n_rounds):
             key, kb = jax.random.split(key)
+            batch = self._round_batch(kb)
+            t0 = time.perf_counter() if observe else 0.0
             if self.faults is not None:
                 active = jnp.asarray(self.faults.active(r))
-                state, metrics = self.round_fn(
-                    state, self._round_batch(kb), active)
-                f = [float(metrics[f"active_frac/{lvl.name}"])
-                     for lvl in self.plan.levels]
+                state, metrics = self.round_fn(state, batch, active)
+                f = [float(x) for x in self.faults.active_frac(r)]
                 fracs.append(f)
                 walls.append(self.round_wall_estimate(f))
             else:
-                state, metrics = self.round_fn(state, self._round_batch(kb))
-            losses.append(float(metrics["loss"]))
-            accs.append(float(metrics.get("accuracy", jnp.nan)))
-            p1 = unstack_first(state.params)
+                state, metrics = self.round_fn(state, batch)
+            if observe:
+                jax.block_until_ready(metrics)
+                measured.append(time.perf_counter() - t0)
+            dev_rounds.append(metrics)
             if self.eval_batch is not None:
+                p1 = unstack_first(state.params)
                 el, em = self._eval(p1, self.eval_batch)
-                elosses.append(float(el))
-                eaccs.append(float(em.get("accuracy", jnp.nan)))
-                gsq.append(float(self._gsq(p1, self.eval_batch)))
-        return SimResult(np.array(losses), np.array(accs),
-                         np.array(elosses), np.array(eaccs),
-                         np.array(gsq), state,
-                         active_fracs=np.array(fracs) if fracs else None,
-                         round_wall_s=np.array(walls) if walls else None)
+                dev_evals.append((el, em.get("accuracy", jnp.nan),
+                                  self._gsq(p1, self.eval_batch)))
+        rounds, evals = jax.device_get((dev_rounds, dev_evals))
+        losses = np.array([float(m["loss"]) for m in rounds])
+        accs = np.array([float(m.get("accuracy", np.nan)) for m in rounds])
+        elosses = np.array([float(e[0]) for e in evals])
+        eaccs = np.array([float(e[1]) for e in evals])
+        gsq = np.array([float(e[2]) for e in evals])
+        stat_keys = [k for k in (rounds[0] if rounds else {})
+                     if k.startswith("telemetry/")]
+        stats = {k: np.array([float(m[k]) for m in rounds])
+                 for k in stat_keys} or None
+        res = SimResult(losses, accs, elosses, eaccs, gsq, state,
+                        active_fracs=np.array(fracs) if fracs else None,
+                        round_wall_s=np.array(walls) if walls else None,
+                        measured_wall_s=(np.array(measured)
+                                         if measured else None),
+                        stats=stats)
+        if observe:
+            self._log_rows(res, n_rounds, rounds)
+        return res
+
+    def _log_rows(self, res: SimResult, n_rounds: int, rounds) -> None:
+        """One schema-versioned train_round row per round (telemetry/
+        metrics.py) plus the typed-channel aggregates."""
+        names = [lvl.name for lvl in self.plan.levels]
+        for r in range(n_rounds):
+            row = {"round": r, "loss": float(res.losses[r]),
+                   "accuracy": float(res.accs[r]),
+                   "wall_s": float(res.measured_wall_s[r]),
+                   "plan": self.plan.describe()}
+            if res.active_fracs is not None:
+                row["active_frac"] = dict(
+                    zip(names, (float(f) for f in res.active_fracs[r])))
+                row["modeled_wall_s"] = float(res.round_wall_s[r])
+            if res.stats:
+                row.update({k: float(v[r]) for k, v in res.stats.items()})
+            self.metrics.log_row("train_round", **row)
+            self.metrics.count("train/rounds")
+            self.metrics.histogram("train/round_wall_s", row["wall_s"])
+        self.metrics.gauge("train/loss", float(res.losses[-1]))
+        self.metrics.flush()
 
 
 def run_algo_comparison(loss_fn, init_fn, sample_batch, eval_batch, *,

@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build
 from repro.serve import GenerationConfig, PagedServeEngine, ServeEngine
+from repro.telemetry import MetricsLogger
 
 
 def main() -> None:
@@ -41,6 +42,10 @@ def main() -> None:
     ap.add_argument("--decode-impl", default="auto",
                     choices=["auto", "xla", "pallas", "pallas_interpret"],
                     help="flash-decode kernel dispatch for the paged path")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write telemetry rows (serve_step per decode "
+                         "step on the paged path, serve_summary per "
+                         "queue) to this JSONL file")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -55,15 +60,17 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     reqs = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
             .astype(np.int32) for _ in range(args.requests)]
+    logger = MetricsLogger(args.metrics_out) if args.metrics_out else None
     t0 = time.time()
     if args.paged:
         budget = int(args.budget_mb * 2 ** 20) or None
         engine = PagedServeEngine(
             bundle, params, slots=args.slots, page_size=args.block_size,
-            max_len=max_len, budget_bytes=budget, gen=gen)
+            max_len=max_len, budget_bytes=budget, gen=gen, metrics=logger)
         results = engine.serve_queue(reqs)
     else:
-        engine = ServeEngine(bundle, params, max_len=max_len, gen=gen)
+        engine = ServeEngine(bundle, params, max_len=max_len, gen=gen,
+                             metrics=logger)
         results = engine.serve_queue(reqs, slots=args.slots)
     dt = time.time() - t0
     total_new = sum(r.steps for r in results)
@@ -78,6 +85,14 @@ def main() -> None:
         print(f"pool: {engine.alloc.n_pages - 1} pages of "
               f"{args.block_size} tokens, peak in use "
               f"{engine.alloc.peak_in_use}")
+    s = engine.steady_state_summary()
+    print(f"steady-state: engine={s['engine']} tok/s={s['tokens_per_s']} "
+          f"wasted={s['wasted_ratio']} occupancy={s['mean_occupancy']} "
+          f"refills={s['refill_events']} "
+          f"peak_pages={s['peak_pages_in_use']}/{s['pool_pages']}")
+    if logger is not None:
+        logger.close()
+        print(f"telemetry rows -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from contextlib import nullcontext
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +82,21 @@ def main() -> None:
                     help="expected per-member miss probability the "
                          "--autotune plan search bills rounds under "
                          "(theory.py n_eff billing; 0 = dense)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="device-side gradient/divergence statistics "
+                         "inside the jitted round (repro/telemetry "
+                         "gradstats.py; losses bit-identical, extra "
+                         "telemetry/* metric keys)")
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL",
+                    help="write one schema-versioned train_round row "
+                         "per round (telemetry/metrics.py JSONL sink)")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE_JSON",
+                    help="export host-side round spans as a Chrome "
+                         "trace (open in ui.perfetto.dev)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="bracket rounds with jax.profiler trace "
+                         "annotations into this directory (TensorBoard "
+                         "/ Perfetto device timeline)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -112,8 +128,10 @@ def main() -> None:
                 1, topo.groups, topo.local, args.fsdp, 1),
             ("pod", "group", "local", "fsdp", "model"))
         shards = shard_plan(mesh)
+    controller = None
     if args.autotune:
-        from repro.autotune import Calibration, search_plans
+        from repro.autotune import (Calibration, CostAwarePlan,
+                                    search_plans)
         cal = Calibration.load(args.autotune)
         template = jax.eval_shape(
             bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
@@ -131,6 +149,14 @@ def main() -> None:
                   f"{sp.comm_s_per_step * 1e3:.3f} score={sp.score:.3e} "
                   f"feasible={sp.feasible}")
         hier = dataclasses.replace(hier, plan=ranked[0].spec)
+        # first telemetry consumer: the controller ingests measured
+        # per-round walls / active fracs (observe) so measured-vs-
+        # modeled wall is reported at the end of the run
+        controller = CostAwarePlan(plan=ranked[0].spec, topo=topo,
+                                   comm=cal, template=template,
+                                   bucket_bytes=hier.bucket_bytes,
+                                   overlap=hier.overlap, shards=shards,
+                                   drop_prob=args.drop_prob)
     plan = hier.resolved_plan
     optimizer = sgd(step_decay_lr(
         args.lr, [args.rounds * hier.steps_per_round * 3 // 4], [0.1]))
@@ -165,32 +191,107 @@ def main() -> None:
     # no doubled peak memory); the loop only ever uses the returned state
     round_fn = jax.jit(make_hier_round(bundle.loss_fn, optimizer, hier,
                                        shards=shards,
-                                       elastic=faults is not None),
+                                       elastic=faults is not None,
+                                       telemetry=args.telemetry or None),
                        donate_argnums=(0,))
     state = init_state(topo, bundle.init, optimizer, key, plan=plan,
                        shards=shards)
+
+    from repro.telemetry import MetricsLogger, SpanTracer
+    logger = MetricsLogger(args.metrics_out) if args.metrics_out else None
+    tracer = (SpanTracer(profile_dir=args.profile_dir)
+              if (args.trace_out or args.profile_dir) else None)
+    modeled_phases = None
+    if tracer is not None:
+        # one fused jit program cannot be host-decomposed: the per-level
+        # compress/collective split rides as MODELED child spans priced
+        # by the same bill every analytic surface reports
+        from repro.core.theory import level_reduction_seconds
+        tmpl = jax.eval_shape(
+            bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        counts = dict(plan.counts_per_round())
+        modeled_phases = []
+        for lvl in plan.levels:
+            comm_s, compute_s, _ = level_reduction_seconds(
+                lvl, topo, tmpl, None)
+            if counts[lvl.name]:
+                modeled_phases += [
+                    (f"{lvl.name}/compress", compute_s * counts[lvl.name]),
+                    (f"{lvl.name}/collective", comm_s * counts[lvl.name])]
+        tracer.start_profiler()
 
     print(f"Hier-AVG: {topo.describe()}  plan={plan.describe()} "
           f"arch={cfg.name}"
           + (f"  faults={faults.describe()}" if faults else ""))
     for r in range(args.rounds):
         t0 = time.time()
+        drec = None
+        with (tracer.span(f"round[{r}]", args={"round": r})
+              if tracer else nullcontext()):
+            with tracer.span("data") if tracer else nullcontext():
+                batch = loader.next_round()
+            with (tracer.span("device", cat="device")
+                  if tracer else nullcontext()) as drec:
+                if faults is not None:
+                    state, metrics = round_fn(
+                        state, batch, jnp.asarray(faults.active(r)))
+                else:
+                    state, metrics = round_fn(state, batch)
+                if tracer:
+                    # bill the device wait to this span, not host_sync
+                    tracer.fence(metrics)
+            with (tracer.span("host_sync")
+                  if tracer else nullcontext()):
+                # ONE device->host transfer for the whole metrics dict
+                # (the old per-key float() calls each blocked)
+                m = jax.device_get(metrics)
+        wall = time.time() - t0
+        if tracer and modeled_phases:
+            tracer.add_modeled_children(drec, modeled_phases)
         if faults is not None:
-            state, metrics = round_fn(state, loader.next_round(),
-                                      jnp.asarray(faults.active(r)))
-            fracs = [float(metrics[f"active_frac/{lvl.name}"])
-                     for lvl in plan.levels]
+            # host-side schedule mask: no extra device sync for fracs
+            fracs = [float(f) for f in faults.active_frac(r)]
             extra = ("  active=" + "/".join(
                 f"{lvl.name}:{f:.2f}" for lvl, f in zip(plan.levels, fracs))
                 + f" wall~{round_wall(fracs) * 1e3:.2f}ms")
         else:
-            state, metrics = round_fn(state, loader.next_round())
-            extra = ""
-        print(f"round {r:3d}  loss={float(metrics['loss']):.4f} "
-              f"acc={float(metrics.get('accuracy', jnp.nan)):.3f} "
-              f"({time.time()-t0:.1f}s, "
+            fracs, extra = None, ""
+        print(f"round {r:3d}  loss={float(m['loss']):.4f} "
+              f"acc={float(m.get('accuracy', float('nan'))):.3f} "
+              f"({wall:.1f}s, "
               f"{loader.tokens_per_round * args.seq} tokens)"
               + extra, flush=True)
+        if logger is not None or controller is not None:
+            row = {"round": r, "loss": float(m["loss"]),
+                   "accuracy": float(m.get("accuracy", float("nan"))),
+                   "wall_s": wall, "plan": plan.describe()}
+            row.update({k: float(v) for k, v in m.items()
+                        if k.startswith("telemetry/")})
+            if fracs is not None:
+                row["active_frac"] = {
+                    lvl.name: f for lvl, f in zip(plan.levels, fracs)}
+                row["modeled_wall_s"] = round_wall(fracs)
+            if logger is not None:
+                logger.log_row("train_round", **row)
+            if controller is not None:
+                controller.observe(row)
+
+    if tracer is not None:
+        tracer.stop_profiler()
+        if args.trace_out:
+            tracer.export_chrome_trace(args.trace_out)
+            print(f"wrote Chrome trace to {args.trace_out} "
+                  f"(open in ui.perfetto.dev)")
+    if logger is not None:
+        logger.close()
+        print(f"wrote {args.rounds} train_round rows to "
+              f"{args.metrics_out}")
+    if controller is not None and controller.observed_wall_s is not None:
+        print(f"controller: measured {controller.observed_wall_s * 1e3:.2f}"
+              f"ms/round vs modeled comm "
+              f"{controller.modeled_round_wall_s * 1e3:.3f}ms "
+              f"(x{controller.wall_bias():.0f} incl. compute/host; live "
+              f"re-planning is the ROADMAP online-control follow-up)")
 
     if args.ckpt:
         save_checkpoint(args.ckpt, unstack_first(state.params),

@@ -70,14 +70,44 @@ def _bucket_len(n: int, floor: int = 8) -> int:
     return b
 
 
+def _queue_summary(engine: str, results: List[RequestResult],
+                   wall_s: float, *, refill_events: int = 0,
+                   peak_pages_in_use: int = 0, pool_pages: int = 0,
+                   mean_occupancy: float = 0.0) -> Dict[str, Any]:
+    """One steady-state summary dict per serve_queue call, shared by
+    both engines (telemetry ``serve_summary`` row shape).  The wasted
+    ratio is the fraction of decode-slot work that produced no kept
+    token (bench_serving convention: each request's first token is the
+    prefill's free sample)."""
+    tokens = sum(r.steps for r in results)
+    decode_steps = sum(r.decode_steps for r in results)
+    return {
+        "engine": engine, "requests": len(results), "tokens": tokens,
+        "decode_steps": decode_steps, "wall_s": round(wall_s, 4),
+        "tokens_per_s": round(tokens / wall_s, 1) if wall_s > 0 else 0.0,
+        "wasted_ratio": round(
+            1.0 - (tokens - len(results)) / max(1, decode_steps), 3),
+        "refill_events": refill_events,
+        "peak_pages_in_use": peak_pages_in_use,
+        "pool_pages": pool_pages,
+        "mean_occupancy": round(mean_occupancy, 3),
+    }
+
+
 class ServeEngine:
     def __init__(self, bundle: ModelBundle, params, *,
                  max_len: int = 1024,
-                 gen: GenerationConfig = GenerationConfig()):
+                 gen: GenerationConfig = GenerationConfig(),
+                 metrics: Optional[Any] = None):
         self.bundle = bundle
         self.params = params
         self.max_len = max_len
         self.gen = gen
+        # optional telemetry/metrics.py MetricsLogger: serve_summary
+        # rows per serve_queue call (the dense engine has no per-step
+        # slot dynamics worth a serve_step stream)
+        self.metrics = metrics
+        self.last_summary: Optional[Dict[str, Any]] = None
         # trace-time counters: the increment is a python side effect, so
         # it runs only when jit actually (re)traces — a cheap compile
         # counter for tests and for spotting shape-bucketing regressions.
@@ -87,6 +117,10 @@ class ServeEngine:
         self._prefill = jax.jit(self._prefill_impl)
         self._decode_scan = jax.jit(self._decode_scan_impl,
                                     static_argnames=("steps",))
+
+    def steady_state_summary(self) -> Optional[Dict[str, Any]]:
+        """Summary of the last ``serve_queue`` call (None before one)."""
+        return self.last_summary
 
     # ------------------------------------------------------------ #
 
@@ -185,6 +219,11 @@ class ServeEngine:
                     rid, prompts[r], t, len(t),
                     decode_steps=self.gen.max_new_tokens - 1))
                 self.finish_times[rid] = done
+        self.last_summary = _queue_summary(
+            "dense", results, time.time() - t0)
+        if self.metrics is not None:
+            self.metrics.log_row("serve_summary", **self.last_summary)
+            self.metrics.flush()
         return results
 
 
@@ -225,7 +264,8 @@ class PagedServeEngine:
                  max_len: int = 1024, prefill_chunk: int = 32,
                  budget_bytes: Optional[int] = None,
                  cache_dtype=jnp.bfloat16,
-                 gen: GenerationConfig = GenerationConfig()):
+                 gen: GenerationConfig = GenerationConfig(),
+                 metrics: Optional[Any] = None):
         if bundle.decode_step_paged is None:
             raise ValueError(
                 f"arch '{bundle.cfg.name}' (family {bundle.cfg.family}) has "
@@ -258,12 +298,26 @@ class PagedServeEngine:
         self.decode_traces = 0
         self.finish_times: Dict[int, float] = {}
         self._t0 = 0.0
+        # optional telemetry/metrics.py MetricsLogger: per-decode-step
+        # serve_step rows (slot occupancy, pool pressure) + one
+        # serve_summary row per serve_queue call
+        self.metrics = metrics
+        self.last_summary: Optional[Dict[str, Any]] = None
+        # admissions that landed AFTER some resident finished during the
+        # current serve_queue call — i.e. token-level slot refills, the
+        # continuous-batching events the dense wave engine cannot have
+        self.refill_events = 0
+        self._finishes_this_call = 0
         # host slot state changed since the last device upload
         self._dirty = True
         # pages donated: the pool is rebound to the returned buffer each
         # step, so the O(pool) arrays are updated in place
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
         self._prefill_chunk = jax.jit(self._prefill_impl, donate_argnums=(2,))
+
+    def steady_state_summary(self) -> Optional[Dict[str, Any]]:
+        """Summary of the last ``serve_queue`` call (None before one)."""
+        return self.last_summary
 
     # ------------------------------------------------------------ #
     # jitted device steps
@@ -328,6 +382,8 @@ class PagedServeEngine:
         need = self._need_pages(plen, target)
         if not self.alloc.reserve(need):
             return False
+        if self._finishes_this_call > 0:
+            self.refill_events += 1
         s = self._slots[i]
         s.state, s.rid, s.plen, s.base = "prefill", rid, plen, 0
         s.target = target
@@ -344,6 +400,7 @@ class PagedServeEngine:
         results[s.rid] = RequestResult(s.rid, s.prompt, t, len(t),
                                        decode_steps=s.decode_steps)
         self.finish_times[s.rid] = time.time() - self._t0
+        self._finishes_this_call += 1
         self.alloc.release(s.pages, reserved_left=s.reserved)
         self._tables[i, :] = 0
         self._lengths[i] = 0
@@ -382,6 +439,10 @@ class PagedServeEngine:
         step = jnp.zeros((), jnp.int32)     # rng step, advanced on device
         self.finish_times: Dict[int, float] = {}
         self._t0 = time.time()
+        self.refill_events = 0
+        self._finishes_this_call = 0
+        decode_step_idx = 0
+        occ_sum = 0.0
         # device-side steady state: uploaded only when host slot state
         # changes (admit / finish / page growth / prefill completion);
         # between events a decode step is ONE dispatch + one token
@@ -448,10 +509,32 @@ class PagedServeEngine:
                     self.params, toks_d, self.pages, tables_d, lengths_d,
                     active_d, key, step)
                 nxt = np.asarray(toks_d)
+                n_active = sum(active)
+                new_tokens = 0
                 for i in range(self.slots):
                     if active[i]:
                         self._lengths[i] += 1
                         self._slots[i].decode_steps += 1
                         self._push_token(i, int(nxt[i]), results)
+                        new_tokens += 1
+                occ_sum += n_active / self.slots
+                if self.metrics is not None:
+                    self.metrics.log_row(
+                        "serve_step", step=decode_step_idx,
+                        active_slots=n_active,
+                        occupancy=round(n_active / self.slots, 3),
+                        new_tokens=new_tokens,
+                        pages_in_use=self.alloc.in_use)
+                decode_step_idx += 1
 
-        return [results[rid] for rid in sorted(results)]
+        out = [results[rid] for rid in sorted(results)]
+        self.last_summary = _queue_summary(
+            "paged", out, time.time() - self._t0,
+            refill_events=self.refill_events,
+            peak_pages_in_use=self.alloc.peak_in_use,
+            pool_pages=self.alloc.n_pages - 1,
+            mean_occupancy=occ_sum / max(1, decode_step_idx))
+        if self.metrics is not None:
+            self.metrics.log_row("serve_summary", **self.last_summary)
+            self.metrics.flush()
+        return out

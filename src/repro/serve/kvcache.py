@@ -115,6 +115,11 @@ class BlockAllocator:
         return len(self._free)
 
     @property
+    def in_use(self) -> int:
+        """Physical pages currently handed out (telemetry gauge)."""
+        return self.n_pages - 1 - len(self._free)
+
+    @property
     def unreserved_pages(self) -> int:
         return len(self._free) - self._reserved
 

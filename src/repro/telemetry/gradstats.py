@@ -1,0 +1,154 @@
+"""Device-side gradient/parameter statistics inside the jitted round.
+
+Everything here is a cheap ``jnp`` reduction added to the round program
+behind the opt-in ``telemetry=`` knob on ``make_hier_round`` — pure
+OBSERVERS: no statistic ever writes back into params/opt_state/EF, so a
+telemetry-on round is bit-identical in losses to telemetry-off
+(benchmarks/bench_telemetry.py gates this on the serial, pipelined, and
+fsdp=2 engines).  The stats land as extra scalar keys in the round's
+metrics dict (each outer ``lax.scan`` stacks them; the round's final
+``tree.map(mean)`` collapses them to per-round means):
+
+* ``telemetry/div_pre/<level>`` / ``div_post/<level>`` — mean over the
+  level's learners of the squared distance to the level-group mean,
+  summed over the parameter tree.  ``div_pre`` is the paper's Theorem
+  3.2 pre-average discrepancy (the quantity Local SGD analyses bound —
+  Stich 1805.09767); ``div_post`` shows what the reduction left behind
+  (0 for an exact mean, > 0 under lossy codecs);
+* ``telemetry/grad_norm_var/<level>`` — cross-learner variance of the
+  per-learner squared gradient norm within the level's averaging
+  groups: the Adaptive Periodic Averaging trigger signal (Jiang &
+  Agrawal 2007.06134 — stretch periods when gradients agree, shrink
+  when they diverge), plus ``telemetry/grad_sq_norm`` (fleet mean);
+* ``telemetry/ef_mass/<level>`` — squared mass of the level's
+  error-feedback residual (the untransmitted delta a sparse codec
+  carries forward);
+* ``telemetry/codec_err/<level>`` — relative squared error of the
+  post-reduction params against the exact dense group mean of the
+  pre-reduction params: the compression error the level's codec
+  actually introduced this fire (~0 for the identity mean).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Which device-side statistics the round computes (all on by
+    default; each adds a handful of fused reductions per level fire)."""
+
+    divergence: bool = True     # div_pre / div_post per level
+    grad_var: bool = True       # grad_norm_var per level + grad_sq_norm
+    ef_mass: bool = True        # EF residual mass per stateful level
+    codec_err: bool = True      # codec error vs the exact dense mean
+
+
+TelemetryKnob = Union[None, bool, TelemetryConfig]
+
+
+def resolve_telemetry(knob: TelemetryKnob) -> Optional[TelemetryConfig]:
+    """``None``/``False`` -> off; ``True`` -> all stats; a
+    :class:`TelemetryConfig` passes through."""
+    if knob is None or knob is False:
+        return None
+    if knob is True:
+        return TelemetryConfig()
+    if isinstance(knob, TelemetryConfig):
+        return knob
+    raise TypeError(
+        f"telemetry= wants None/bool/TelemetryConfig, got {knob!r}")
+
+
+def _learner_axes(x: jax.Array) -> Tuple[int, ...]:
+    # stacked-learner layout: leaves are [pods, G, S, *shape]
+    return tuple(range(3, x.ndim))
+
+
+def group_divergence(params: Any, axes: Sequence[int]) -> jax.Array:
+    """Mean over learners of ||w_j - mean_group(w)||^2, summed over the
+    tree — the Thm-3.2 discrepancy at a level whose groups are the
+    stacked ``axes``.  fp32 accumulation regardless of param dtype."""
+    tot = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree.leaves(params):
+        x = leaf.astype(jnp.float32)
+        d = jnp.square(x - x.mean(axis=tuple(axes), keepdims=True))
+        tot = tot + d.sum(axis=_learner_axes(x)).mean()
+    return tot
+
+
+def codec_error(post: Any, pre: Any, axes: Sequence[int]) -> jax.Array:
+    """Relative squared error of the reduced params vs the exact dense
+    group mean of the pre-reduction params, over the whole tree."""
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    for p_leaf, q_leaf in zip(jax.tree.leaves(post), jax.tree.leaves(pre)):
+        m = q_leaf.astype(jnp.float32).mean(axis=tuple(axes),
+                                            keepdims=True)
+        num = num + jnp.square(p_leaf.astype(jnp.float32) - m).sum()
+        den = den + jnp.square(jnp.broadcast_to(m, p_leaf.shape)).sum()
+    return num / (den + jnp.float32(1e-30))
+
+
+def ef_mass(level_state: Any) -> jax.Array:
+    """Squared mass of a level's error-feedback residual.  Sparse/qint8
+    EF states carry the untransmitted residual in ``.err``; for other
+    stateful reducers every float leaf counts (int leaves — top-k keys,
+    counters — are skipped)."""
+    src = getattr(level_state, "err", level_state)
+    tot = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree.leaves(src):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            tot = tot + jnp.square(leaf.astype(jnp.float32)).sum()
+    return tot
+
+
+def level_stats(cfg: TelemetryConfig, level: Any, pre_params: Any,
+                post_params: Any, comm_state: Any
+                ) -> Dict[str, jax.Array]:
+    """The per-fire statistics of one reduction at ``level`` (a
+    ReductionLevel): pre/post divergence, codec error, EF mass."""
+    out: Dict[str, jax.Array] = {}
+    if cfg.divergence:
+        out[f"telemetry/div_pre/{level.name}"] = \
+            group_divergence(pre_params, level.axes)
+        out[f"telemetry/div_post/{level.name}"] = \
+            group_divergence(post_params, level.axes)
+    if cfg.codec_err:
+        out[f"telemetry/codec_err/{level.name}"] = \
+            codec_error(post_params, pre_params, level.axes)
+    if (cfg.ef_mass and level.reducer.stateful
+            and isinstance(comm_state, dict)
+            and level.name in comm_state):
+        out[f"telemetry/ef_mass/{level.name}"] = \
+            ef_mass(comm_state[level.name])
+    return out
+
+
+def make_grad_observer(cfg: Optional[TelemetryConfig],
+                       levels: Sequence[Any]
+                       ) -> Optional[Callable[[Any], Dict]]:
+    """Observer the SGD step calls on the (stacked, fp32-accumulated)
+    per-learner gradients: per-level within-group variance of the
+    per-learner squared gradient norm — the Jiang & Agrawal period
+    trigger — plus the fleet-mean squared norm."""
+    if cfg is None or not cfg.grad_var:
+        return None
+
+    def observe(grads: Any) -> Dict[str, jax.Array]:
+        sq = jnp.zeros((), jnp.float32)
+        for leaf in jax.tree.leaves(grads):
+            g = leaf.astype(jnp.float32)
+            sq = sq + jnp.square(g).sum(axis=_learner_axes(g))
+        out = {"telemetry/grad_sq_norm": sq.mean()}
+        for lvl in levels:
+            m = sq.mean(axis=tuple(lvl.axes), keepdims=True)
+            out[f"telemetry/grad_norm_var/{lvl.name}"] = \
+                jnp.square(sq - m).mean()
+        return out
+
+    return observe
